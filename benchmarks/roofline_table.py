@@ -1,0 +1,104 @@
+"""Roofline table generator: formats the dry-run JSONL into the §Roofline
+markdown table (one row per arch x shape x mesh) with dominant terms and
+what-would-move-it-down notes."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+MOVE_NOTES = {
+    ("memory", "train"): "shard the remat residual stack (sequence "
+                         "parallelism) / larger microbatch count",
+    ("memory", "prefill"): "fuse attention chunks (Pallas flash) to cut "
+                           "score-tensor round-trips",
+    ("memory", "decode"): "KV-cache layout: batch-major blocks so the "
+                          "per-token gather is contiguous",
+    ("collective", "train"): "shard_map MoE dispatch (all-to-all instead of "
+                             "gather/scatter), bf16 TP all-reduces",
+    ("collective", "prefill"): "sequence-shard KV; overlap all-gather with "
+                               "per-layer compute",
+    ("collective", "decode"): "replicate small weights; batch KV updates",
+    ("compute", "train"): "cut attention recompute (custom-vjp flash), "
+                          "skip fully-masked causal chunks",
+    ("compute", "prefill"): "skip fully-masked causal chunks",
+    ("compute", "decode"): "already compute-lean; raise batch",
+}
+
+
+def load(mesh: str) -> List[Dict]:
+    # prefer the final (post-§Perf) sweep; fall back to the baseline sweep
+    for name in (f"final_{mesh}.jsonl", f"dryrun_{mesh}.jsonl"):
+        path = os.path.join(RESULTS, name)
+        if os.path.exists(path):
+            return [json.loads(l) for l in open(path)]
+    return []
+
+
+def run(log=print) -> List[Dict]:
+    rows = []
+    for mesh in ("single", "multi"):
+        for r in load(mesh):
+            if r["note"].startswith("SKIPPED"):
+                rows.append({"name": f"roofline:{r['arch']}:{r['shape']}:"
+                             f"{r['mesh']}", "us_per_call": 0.0,
+                             "derived": "SKIP(long-context rule)"})
+                continue
+            if not r["ok"]:
+                rows.append({"name": f"roofline:{r['arch']}:{r['shape']}:"
+                             f"{r['mesh']}", "us_per_call": 0.0,
+                             "derived": "FAILED"})
+                continue
+            bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            frac = r["compute_s"] / bound if bound else 0.0
+            rows.append({
+                "name": f"roofline:{r['arch']}:{r['shape']}:{r['mesh']}",
+                "us_per_call": bound * 1e6,
+                "derived": (f"dom={r['dominant']} frac={frac:.3f} "
+                            f"useful={r['useful_fraction']:.3f} "
+                            f"peak={r['peak_bytes']/2**30:.1f}GiB"),
+            })
+    return rows
+
+
+def markdown_table(mesh: str) -> str:
+    rows = load(mesh)
+    out = ["| arch | shape | compute_s | memory_s (UB) | memory_s (LB) | "
+           "collective_s | dominant | roofline frac | useful (6ND/HLO) | "
+           "peak GiB/dev | what moves the dominant term |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["note"].startswith("SKIPPED"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"skip | — | — | — | {r['note'][9:90]} |")
+            continue
+        if not r["ok"]:
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | "
+                       f"| | |")
+            continue
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        note = MOVE_NOTES.get((r["dominant"], r["kind"]), "")
+        mem_lb = r.get("bytes_dev_min", 0.0) / 819e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {mem_lb:.4f} | "
+            f"{r['collective_s']:.4f} | "
+            f"{r['dominant']} | {frac:.3f} | {r['useful_fraction']:.3f} | "
+            f"{r['peak_bytes']/2**30:.2f} | {note} |")
+    return "\n".join(out)
+
+
+def write_markdown(log=print) -> None:
+    for mesh in ("single", "multi"):
+        if not load(mesh):
+            continue
+        path = os.path.join(RESULTS, f"roofline_{mesh}.md")
+        with open(path, "w") as f:
+            f.write(f"# §Roofline — {mesh}-pod mesh\n\n"
+                    "memory UB = fusion-boundary upper bound; LB = "
+                    "ideal-fusion lower bound (EXPERIMENTS.md).\n\n")
+            f.write(markdown_table(mesh) + "\n")
+        log(f"wrote {path}")

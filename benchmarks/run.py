@@ -1,0 +1,76 @@
+"""Benchmark harness: one function per paper table + kernel/roofline benches.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract).  Full-size runs:
+``python -m benchmarks.run --full``; default sizes finish on the CPU box in
+a few minutes.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale NAS settings (hours)")
+    ap.add_argument("--skip-nas", action="store_true",
+                    help="only kernel + roofline benches")
+    args = ap.parse_args()
+
+    rows = []
+    t0 = time.time()
+
+    from benchmarks import kernel_bench, roofline_table
+    rows += kernel_bench.run(log=lambda *a: print(*a, file=sys.stderr))
+    rows += roofline_table.run(log=lambda *a: print(*a, file=sys.stderr))
+    roofline_table.write_markdown(log=lambda *a: print(*a, file=sys.stderr))
+
+    if not args.skip_nas:
+        from benchmarks import table1_objectives, table2_domains
+        gens = 12 if args.full else 3
+        samples = 1600 if args.full else 240
+        steps = 300 if args.full else 60
+
+        t = time.time()
+        t1 = table1_objectives.run(generations=gens, samples=samples,
+                                   train_steps=steps,
+                                   log=lambda *a: print(*a, file=sys.stderr))
+        for r in t1:
+            rows.append({
+                "name": f"table1:{r['nas_objective']}:{r['impl_strategy']}",
+                "us_per_call": (time.time() - t) * 1e6 / max(len(t1), 1),
+                "derived": (f"thr={r['throughput_sps']:.3g}sps "
+                            f"P={r['p_total_w']:.2f}W "
+                            f"E={r['e_total_uj']:.3g}uJ "
+                            f"params={r['params']}"),
+            })
+        for claim, ok in table1_objectives.validate(t1).items():
+            rows.append({"name": f"table1_claim:{claim}",
+                         "us_per_call": 0.0, "derived": str(ok)})
+
+        t = time.time()
+        t2 = table2_domains.run(generations=gens, samples=samples,
+                                train_steps=steps,
+                                log=lambda *a: print(*a, file=sys.stderr))
+        for r in t2:
+            rows.append({
+                "name": f"table2:{r['device'].split(' (')[0]}",
+                "us_per_call": (time.time() - t) * 1e6 / max(len(t2), 1),
+                "derived": (f"f={r['freq_mhz']:.0f}MHz batch={r['batch']} "
+                            f"thr={r['throughput_sps']:.3g}sps "
+                            f"P={r['p_total_w']:.2f}W "
+                            f"E={r['e_total_j']:.3g}J"),
+            })
+        for claim, ok in table2_domains.validate(t2).items():
+            rows.append({"name": f"table2_claim:{claim}",
+                         "us_per_call": 0.0, "derived": str(ok)})
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    sys.stdout.flush()  # keep the CSV clean when stderr is merged via 2>&1
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

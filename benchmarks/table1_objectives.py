@@ -1,0 +1,93 @@
+"""Table I reproduction: NAS objective x implementation strategy.
+
+Paper §VI-A: models searched for (low E, max alpha), (low E, min alpha) and
+(low P, min alpha), each implemented with min- and max-alpha strategies; the
+best number in each column must be the candidate whose NAS objective matches
+the implementation strategy — the cross-layer claim.
+
+The NAS runs are seeded and small (CPU box); the hardware numbers come from
+the paper's Eqs. 1-4 with the FPGA_ZU calibration profile.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.evolution import EvolutionarySearch, NASConfig
+from repro.core.genome import describe
+from repro.core.hw_model import FPGA_ZU, estimate
+from repro.core.objectives import CHEAP_NAMES
+from repro.data.ecg import make_ecg_dataset, train_val_split
+
+
+def run(generations: int = 4, samples: int = 320, train_steps: int = 100,
+        seed: int = 0, log=print) -> List[Dict]:
+    x, y = make_ecg_dataset(seed=seed, n_samples=samples, decimation=16)
+    tr, va = train_val_split(x, y)
+
+    # one search per NAS objective (the paper runs separate experiments)
+    objectives = {
+        "low_E_max_alpha": "energy_max_alpha_j",
+        "low_E_min_alpha": "energy_min_alpha_j",
+        "low_P_min_alpha": "power_min_alpha_w",
+    }
+    rows = []
+    solutions = {}
+    for tag, obj in objectives.items():
+        cfg = NASConfig(generations=generations, children_per_gen=6,
+                        n_accept=3, init_population=5,
+                        train_steps=train_steps, train_batch=32,
+                        n_workers=2, seed=seed, det_min=0.7, fa_max=0.3)
+        search = EvolutionarySearch(cfg, tr, va, log=lambda *_: None)
+        state = search.run()
+        sol = search.select_solution(state, obj)
+        if sol is None:  # fall back to best cheap value in population
+            idx = CHEAP_NAMES.index(obj)
+            sol = min(state.population, key=lambda c: c.cheap[idx])
+        solutions[tag] = sol
+        log(f"[table1] {tag}: depth={sol.genome.depth()} "
+            f"params={int(sol.cheap[6])}")
+
+    for impl in ("min", "max"):
+        for tag, sol in solutions.items():
+            est = estimate(sol.genome, strategy=impl, profile=FPGA_ZU)
+            rows.append({
+                "nas_objective": tag,
+                "impl_strategy": f"{impl}_alpha",
+                "throughput_sps": est.throughput_sps,
+                "p_total_w": est.p_total_w,
+                "e_total_uj": est.e_total_j * 1e6,
+                "params": est.params,
+                "depth": sol.genome.depth(),
+            })
+    return rows
+
+
+def validate(rows: List[Dict]) -> Dict[str, bool]:
+    """The paper's qualitative claims on Table I."""
+    by = {(r["nas_objective"], r["impl_strategy"]): r for r in rows}
+    claims = {}
+    # claim 1: with min-alpha impl, the low-E/min-alpha model has the best
+    # (lowest) energy among the three
+    e_min = {t: by[(t, "min_alpha")]["e_total_uj"] for t, _ in
+             [(r["nas_objective"], 0) for r in rows]}
+    claims["minalpha_energy_winner_is_lowE_minalpha"] = (
+        min(e_min, key=e_min.get) == "low_E_min_alpha")
+    # claim 2: with min-alpha impl, the low-P model has the lowest power
+    p_min = {t: by[(t, "min_alpha")]["p_total_w"] for t in e_min}
+    claims["minalpha_power_winner_is_lowP"] = (
+        min(p_min, key=p_min.get) == "low_P_min_alpha")
+    # claim 3: with max-alpha impl, the low-E/max-alpha model has the best
+    # energy
+    e_max = {t: by[(t, "max_alpha")]["e_total_uj"] for t in e_min}
+    claims["maxalpha_energy_winner_is_lowE_maxalpha"] = (
+        min(e_max, key=e_max.get) == "low_E_max_alpha")
+    # claim 4: unrolling raises power but cuts energy (for energy-searched)
+    claims["unroll_raises_power_cuts_energy"] = (
+        by[("low_E_max_alpha", "max_alpha")]["p_total_w"]
+        > by[("low_E_max_alpha", "min_alpha")]["p_total_w"]
+        and by[("low_E_max_alpha", "max_alpha")]["e_total_uj"]
+        < by[("low_E_max_alpha", "min_alpha")]["e_total_uj"])
+    return claims

@@ -1,0 +1,45 @@
+"""HALF's cross-layer search over TPU implementation parameters.
+
+Runs the paper's cheap-objective → Pareto-frontier → select loop on the
+implementation genome (microbatches, q-blocking, MoE strategy, remat) for a
+zoo architecture, and prints whether the analytic model reproduces the
+hand-tuned §Perf configuration.
+
+Run:  PYTHONPATH=src python examples/codesign_tpu.py --arch kimi-k2-1t-a32b
+"""
+import argparse
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.configs.shapes import SHAPES
+from repro.core.tpu_codesign import best_by_bound, enumerate_frontier
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="kimi-k2-1t-a32b", choices=ALL_ARCHS)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--max-act-gib", type=float, default=16.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    cell = SHAPES[args.shape]
+    mesh = {"data": 16, "model": 16}
+    genomes, costs, front = enumerate_frontier(cfg, cell, mesh)
+    print(f"{args.arch} x {args.shape}: {len(genomes)} implementation "
+          f"points, frontier size {len(front)}")
+    print(f"{'genome':28s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'act_GiB':>8s} {'bound_s':>9s}")
+    order = sorted(front, key=lambda i: costs[i].bound_s)
+    for i in order[:10]:
+        c = costs[i]
+        print(f"{genomes[i].short():28s} {c.compute_s:10.3f} "
+              f"{c.memory_s:10.3f} {c.collective_s:10.3f} "
+              f"{c.act_gib:8.2f} {c.bound_s:9.3f}")
+    g, c = best_by_bound(genomes, costs, front, args.max_act_gib)
+    print(f"\nselected: {g.short()}  bound={c.bound_s:.3f}s")
+    print(f"adopted §Perf config for comparison: "
+          f"mb{cfg.microbatches}, moe={cfg.moe_impl}, remat={cfg.remat}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""HALF's contribution: hardware-aware evolutionary NAS + analytic hw models."""
+from repro.core.evolution import EvolutionarySearch, NASConfig  # noqa: F401
+from repro.core.genome import Genome, mutate, random_genome  # noqa: F401
+from repro.core.hw_model import estimate, roofline  # noqa: F401
+from repro.core.search_space import DEFAULT_SPACE, SearchSpace  # noqa: F401

@@ -1,0 +1,282 @@
+"""The hardware-aware evolutionary NAS loop (paper §III-A, §VI).
+
+Per generation (paper: 100 generations x 20 children on 4 GPUs):
+
+1. sample parents from the population, inverse-KDE-density weighted in
+   cheap-objective space (LEMONADE-style exploration of the frontier);
+2. produce children by forced-active mutation (+ occasional crossover);
+   phenotype-hash dedup implements the dormant-gene shortcut — children whose
+   expressed genes are unchanged are never retrained;
+3. evaluate the children's cheap objectives analytically (Eqs. 1-4);
+4. **two-step preselection**: only ``n_accept`` children, chosen
+   inverse-density in cheap space, get expensive evaluation (training) —
+   dispatched through the dynamic workload scheduler;
+5. environmental selection (non-dominated sort + crowding) trims the merged
+   population back to capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import selection as sel
+from repro.core.genome import Genome, crossover, mutate, random_genome
+from repro.core.hw_model import FPGA_ZU, HardwareProfile
+from repro.core.objectives import (
+    Candidate,
+    cheap_matrix,
+    cheap_objectives,
+    expensive_objectives,
+    objective_matrix,
+)
+from repro.core.pareto import environmental_selection, pareto_front
+from repro.core.scheduler import DynamicScheduler
+from repro.core.search_space import DEFAULT_SPACE, SearchSpace
+from repro.core.trainer import TrainResult, train_candidate
+
+
+@dataclasses.dataclass
+class NASConfig:
+    generations: int = 100
+    children_per_gen: int = 20
+    n_accept: int = 8              # expensive-evaluation budget per generation
+    population_cap: int = 64
+    init_population: int = 16
+    mutation_rate: float = 0.1
+    crossover_prob: float = 0.25
+    train_steps: int = 300
+    train_batch: int = 64
+    lr: float = 3e-3
+    n_workers: int = 4
+    seed: int = 0
+    profile: HardwareProfile = FPGA_ZU
+    det_min: float = 0.90          # paper's hard acceptance limits
+    fa_max: float = 0.20
+
+
+@dataclasses.dataclass
+class NASState:
+    population: List[Candidate]
+    generation: int
+    evaluated_hashes: Dict[str, np.ndarray]  # phenotype hash -> expensive objs
+    history: List[dict]
+
+
+class EvolutionarySearch:
+    """Reusable search driver; inject a trainer for tests."""
+
+    def __init__(self, config: NASConfig,
+                 data_train, data_val,
+                 space: SearchSpace = DEFAULT_SPACE,
+                 train_fn: Optional[Callable[[Genome], TrainResult]] = None,
+                 log: Callable[[str], None] = print):
+        self.cfg = config
+        self.space = space
+        self.rng = np.random.default_rng(config.seed)
+        self.log = log
+        self._train_fn = train_fn or (lambda g: train_candidate(
+            g, data_train, data_val, space=self.space,
+            steps=config.train_steps, batch_size=config.train_batch,
+            lr=config.lr, seed=config.seed))
+        self.scheduler = DynamicScheduler(n_workers=config.n_workers,
+                                          max_retries=2, timeout_s=1800.0)
+
+    # ------------------------------------------------------------- lifecycle
+    def init_state(self) -> NASState:
+        pop: List[Candidate] = []
+        seen = set()
+        while len(pop) < self.cfg.init_population:
+            g = random_genome(self.rng, self.space)
+            h = g.phenotype_hash(self.space)
+            if h in seen:
+                continue
+            seen.add(h)
+            pop.append(Candidate(genome=g, cheap=cheap_objectives(
+                g, profile=self.cfg.profile, space=self.space), phash=h))
+        state = NASState(population=pop, generation=0,
+                         evaluated_hashes={}, history=[])
+        self._train_batch(state, pop)
+        return state
+
+    # ---------------------------------------------------------------- steps
+    def _make_children(self, state: NASState) -> List[Candidate]:
+        pop = state.population
+        cheap = cheap_matrix(pop)
+        parents_idx = sel.sample_parents(self.rng, cheap,
+                                         self.cfg.children_per_gen)
+        children: List[Candidate] = []
+        seen = {c.phash for c in pop}
+        for pi in parents_idx:
+            parent = pop[pi]
+            if self.rng.random() < self.cfg.crossover_prob and len(pop) > 1:
+                mate = pop[int(self.rng.integers(0, len(pop)))]
+                child_g = crossover(parent.genome, mate.genome, self.rng,
+                                    self.space)
+                child_g = mutate(child_g, self.rng, self.space,
+                                 rate=self.cfg.mutation_rate,
+                                 force_active_change=False)
+            else:
+                child_g = mutate(parent.genome, self.rng, self.space,
+                                 rate=self.cfg.mutation_rate,
+                                 force_active_change=True)
+            if not child_g.is_valid(self.space):
+                continue
+            h = child_g.phenotype_hash(self.space)
+            if h in seen:
+                continue  # dormant-gene shortcut: identical phenotype
+            seen.add(h)
+            children.append(Candidate(
+                genome=child_g,
+                cheap=cheap_objectives(child_g, profile=self.cfg.profile,
+                                       space=self.space),
+                phash=h, generation=state.generation + 1))
+        return children
+
+    def _train_batch(self, state: NASState, cands: Sequence[Candidate]):
+        todo = []
+        for c in cands:
+            if c.phash in state.evaluated_hashes:  # cache hit (dormant genes)
+                c.expensive = state.evaluated_hashes[c.phash]
+            else:
+                todo.append(c)
+        if not todo:
+            return
+        jobs = [(lambda g=c.genome: self._train_fn(g)) for c in todo]
+        results = self.scheduler.run(jobs)
+        for c, r in zip(todo, results):
+            if r.ok:
+                c.train_result = r.value
+                c.expensive = expensive_objectives(r.value)
+            else:  # failed after retries: pessimistic objectives, stay in pool
+                self.log(f"[nas] candidate {c.phash} failed: "
+                         f"{r.error.splitlines()[-1] if r.error else '?'}")
+                c.expensive = np.asarray([1.0, 1.0])
+            state.evaluated_hashes[c.phash] = c.expensive
+
+    def step(self, state: NASState) -> NASState:
+        t0 = time.monotonic()
+        children = self._make_children(state)
+        if children:
+            pop_cheap = cheap_matrix(state.population)
+            child_cheap = cheap_matrix(children)
+            acc_idx = sel.preselect_children(self.rng, pop_cheap, child_cheap,
+                                             self.cfg.n_accept)
+            accepted = [children[i] for i in acc_idx]
+            self._train_batch(state, accepted)
+        else:
+            accepted = []
+
+        merged = state.population + accepted
+        objs = objective_matrix(merged)
+        keep = environmental_selection(objs, self.cfg.population_cap)
+        new_pop = [merged[i] for i in keep]
+
+        state.generation += 1
+        front = pareto_front(objective_matrix(new_pop))
+        feasible = [c for c in new_pop if c.meets_constraints(
+            self.cfg.det_min, self.cfg.fa_max)]
+        rec = {
+            "generation": state.generation,
+            "children": len(children),
+            "trained": len(accepted),
+            "population": len(new_pop),
+            "front_size": int(len(front)),
+            "feasible": len(feasible),
+            "best_energy_j": min((c.cheap[3] for c in feasible),
+                                 default=float("nan")),
+            "elapsed_s": time.monotonic() - t0,
+        }
+        state.history.append(rec)
+        state.population = new_pop
+        self.log(f"[nas] gen {rec['generation']:3d} "
+                 f"pop={rec['population']} front={rec['front_size']} "
+                 f"feasible={rec['feasible']} "
+                 f"bestE={rec['best_energy_j']:.3e}J "
+                 f"({rec['elapsed_s']:.1f}s)")
+        return state
+
+    def run(self, generations: Optional[int] = None) -> NASState:
+        state = self.init_state()
+        for _ in range(generations or self.cfg.generations):
+            state = self.step(state)
+        return state
+
+    # ------------------------------------------------------- checkpointing
+    # The paper's search runs two days on a GPU farm; a preempted search
+    # must resume mid-generation.  State is plain JSON (genomes are small
+    # int tuples) written atomically.
+    def save_state(self, state: NASState, path: str) -> None:
+        import json as _json
+        import os as _os
+        payload = {
+            "generation": state.generation,
+            "history": state.history,
+            "evaluated": {k: v.tolist()
+                          for k, v in state.evaluated_hashes.items()},
+            "population": [{
+                "genome": dataclasses.asdict(c.genome),
+                "cheap": c.cheap.tolist(),
+                "expensive": None if c.expensive is None
+                else c.expensive.tolist(),
+                "phash": c.phash,
+                "generation": c.generation,
+            } for c in state.population],
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            _json.dump(payload, f)
+        _os.replace(tmp, path)
+
+    def load_state(self, path: str) -> NASState:
+        import json as _json
+        with open(path) as f:
+            payload = _json.load(f)
+        pop = []
+        for c in payload["population"]:
+            g = c["genome"]
+            genome = Genome(
+                op_genes=tuple(g["op_genes"]),
+                conn_genes=tuple(g["conn_genes"]),
+                out_gene=g["out_gene"], w_bits_gene=g["w_bits_gene"],
+                a_bits_gene=g["a_bits_gene"], i_bits_gene=g["i_bits_gene"],
+                dec_gene=g["dec_gene"])
+            pop.append(Candidate(
+                genome=genome, cheap=np.asarray(c["cheap"]),
+                expensive=None if c["expensive"] is None
+                else np.asarray(c["expensive"]),
+                phash=c["phash"], generation=c["generation"]))
+        return NASState(
+            population=pop, generation=payload["generation"],
+            evaluated_hashes={k: np.asarray(v)
+                              for k, v in payload["evaluated"].items()},
+            history=payload["history"])
+
+    def run_resumable(self, ckpt_path: str,
+                      generations: Optional[int] = None) -> NASState:
+        """Resume from `ckpt_path` if present; checkpoint every generation."""
+        import os as _os
+        if _os.path.exists(ckpt_path):
+            state = self.load_state(ckpt_path)
+            self.log(f"[nas] resumed at generation {state.generation}")
+        else:
+            state = self.init_state()
+        target = generations or self.cfg.generations
+        while state.generation < target:
+            state = self.step(state)
+            self.save_state(state, ckpt_path)
+        return state
+
+    # ---------------------------------------------------------------- report
+    def select_solution(self, state: NASState, objective: str = "energy_max_alpha_j"
+                        ) -> Optional[Candidate]:
+        """Best feasible candidate for a deployment objective (paper §VI-B)."""
+        from repro.core.objectives import CHEAP_NAMES
+        idx = CHEAP_NAMES.index(objective)
+        feas = [c for c in state.population
+                if c.meets_constraints(self.cfg.det_min, self.cfg.fa_max)]
+        if not feas:
+            return None
+        return min(feas, key=lambda c: c.cheap[idx])

@@ -1,0 +1,197 @@
+"""Genetic encoding with dormant genes (paper §III-A, via Suganuma et al. '17).
+
+Cartesian-genetic-programming-style linear encoding: the genome holds
+``max_depth`` node slots; each node has a *function gene* (index into the op
+table) and a *connection gene* (which earlier node, or the input, feeds it).
+The phenotype is decoded by walking back from the *output gene* — nodes not
+on that path are **dormant**: they are carried (and mutated) silently and can
+be re-activated by a later connection-gene mutation.  This is the paper's
+"concept of dormant genes" that boosts the evolutionary search.
+
+Additional genes: quantization (weights / activations / input) and input
+decimation, reflecting the paper's hardware-aware search space.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.search_space import DEFAULT_SPACE, SearchSpace
+from repro.hwlib.layers import DENSE, GLOBALPOOL, LayerSpec, out_shape
+from repro.hwlib.quant import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Genome:
+    """Immutable genome. All gene values are small ints (numpy-friendly)."""
+
+    op_genes: Tuple[int, ...]      # len == max_depth, values in [0, n_ops)
+    conn_genes: Tuple[int, ...]    # node i takes input from conn[i] in [0, i]
+    out_gene: int                  # node (1-indexed) feeding the head
+    w_bits_gene: int
+    a_bits_gene: int
+    i_bits_gene: int
+    dec_gene: int                  # input decimation index
+
+    # ---------------------------------------------------------------- decode
+    def active_nodes(self) -> List[int]:
+        """Indices (0-based) of nodes on the input→output path, in order."""
+        path: List[int] = []
+        node = self.out_gene  # 1-indexed; 0 means "the input" (invalid here)
+        while node > 0:
+            path.append(node - 1)
+            node = self.conn_genes[node - 1]
+        return list(reversed(path))
+
+    def phenotype(self, space: SearchSpace = DEFAULT_SPACE) -> List[LayerSpec]:
+        """The decoded topology: active ops + the fixed GAP/dense head."""
+        specs = [space.ops[self.op_genes[i]] for i in self.active_nodes()]
+        specs.append(LayerSpec(kind=GLOBALPOOL))
+        specs.append(LayerSpec(kind=DENSE, out_channels=space.n_classes))
+        return specs
+
+    def depth(self) -> int:
+        """Searchable depth (final GAP+dense excluded, as in the paper)."""
+        return len(self.active_nodes())
+
+    def quant(self, space: SearchSpace = DEFAULT_SPACE) -> QuantConfig:
+        return space.quant_config(self.w_bits_gene, self.a_bits_gene,
+                                  self.i_bits_gene)
+
+    def input_length(self, space: SearchSpace = DEFAULT_SPACE) -> int:
+        return space.input_length(self.dec_gene)
+
+    def phenotype_hash(self, space: SearchSpace = DEFAULT_SPACE) -> str:
+        """Hash of the *expressed* genes only — mutations that touch dormant
+        genes leave this unchanged, letting the search skip re-evaluation
+        (the dormant-gene shortcut)."""
+        parts = [s.short() for s in self.phenotype(space)]
+        parts.append(self.quant(space).short())
+        parts.append(f"dec{self.dec_gene}")
+        return hashlib.sha1("|".join(parts).encode()).hexdigest()[:16]
+
+    def is_valid(self, space: SearchSpace = DEFAULT_SPACE) -> bool:
+        """Depth bounds + every layer's spatial shape stays >= 1."""
+        d = self.depth()
+        if not (space.min_depth <= d <= space.max_depth):
+            return False
+        try:
+            shapes = decode_shapes(self, space)
+        except ValueError:
+            return False
+        return all(l >= 1 for l, _ in shapes)
+
+
+def decode_shapes(g: Genome, space: SearchSpace = DEFAULT_SPACE
+                  ) -> List[Tuple[int, int]]:
+    """(length, channels) after each phenotype layer."""
+    l, c = g.input_length(space), 2
+    shapes = []
+    for spec in g.phenotype(space):
+        l, c = out_shape(spec, l, c)
+        shapes.append((l, c))
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Random construction / mutation / crossover
+# ---------------------------------------------------------------------------
+
+def random_genome(rng: np.random.Generator,
+                  space: SearchSpace = DEFAULT_SPACE,
+                  max_tries: int = 200) -> Genome:
+    for _ in range(max_tries):
+        n = space.max_depth
+        op = tuple(int(v) for v in rng.integers(0, space.n_ops, n))
+        # chain-biased connections: mostly the previous node, sometimes a skip
+        conn = []
+        for i in range(n):
+            conn.append(int(rng.integers(0, i + 1)) if rng.random() < 0.25
+                        else i)
+        g = Genome(
+            op_genes=op,
+            conn_genes=tuple(conn),
+            out_gene=int(rng.integers(space.min_depth, n + 1)),
+            w_bits_gene=int(rng.integers(0, len(space.weight_bits))),
+            a_bits_gene=int(rng.integers(0, len(space.act_bits))),
+            i_bits_gene=int(rng.integers(0, len(space.input_bits))),
+            dec_gene=int(rng.integers(0, len(space.input_decimations))),
+        )
+        if g.is_valid(space):
+            return g
+    raise RuntimeError("could not sample a valid genome")
+
+
+def mutate(
+    g: Genome,
+    rng: np.random.Generator,
+    space: SearchSpace = DEFAULT_SPACE,
+    rate: float = 0.1,
+    force_active_change: bool = True,
+    max_tries: int = 200,
+) -> Genome:
+    """Point mutation. With ``force_active_change`` the mutation loop repeats
+    until the *phenotype* changes (Suganuma's forced mutation for children);
+    without it, a mutation may hit only dormant genes (neutral drift)."""
+    base_hash = g.phenotype_hash(space)
+    for _ in range(max_tries):
+        op = list(g.op_genes)
+        conn = list(g.conn_genes)
+        out = g.out_gene
+        wq, aq, iq, dq = (g.w_bits_gene, g.a_bits_gene, g.i_bits_gene,
+                          g.dec_gene)
+        for i in range(len(op)):
+            if rng.random() < rate:
+                op[i] = int(rng.integers(0, space.n_ops))
+            if rng.random() < rate:
+                conn[i] = int(rng.integers(0, i + 1))
+        if rng.random() < rate:
+            out = int(rng.integers(1, len(op) + 1))
+        if rng.random() < rate:
+            wq = int(rng.integers(0, len(space.weight_bits)))
+        if rng.random() < rate:
+            aq = int(rng.integers(0, len(space.act_bits)))
+        if rng.random() < rate:
+            iq = int(rng.integers(0, len(space.input_bits)))
+        if rng.random() < rate:
+            dq = int(rng.integers(0, len(space.input_decimations)))
+        cand = Genome(tuple(op), tuple(conn), out, wq, aq, iq, dq)
+        if not cand.is_valid(space):
+            continue
+        if force_active_change and cand.phenotype_hash(space) == base_hash:
+            continue  # mutation was neutral (dormant genes only) — retry
+        return cand
+    return g  # give up: return parent unchanged
+
+
+def crossover(a: Genome, b: Genome, rng: np.random.Generator,
+              space: SearchSpace = DEFAULT_SPACE,
+              max_tries: int = 50) -> Genome:
+    """Single-point crossover over the node slots (biology-inspired ops the
+    genetic encoding enables, paper §II-A)."""
+    n = len(a.op_genes)
+    for _ in range(max_tries):
+        cut = int(rng.integers(1, n))
+        op = a.op_genes[:cut] + b.op_genes[cut:]
+        conn = a.conn_genes[:cut] + b.conn_genes[cut:]
+        donor = a if rng.random() < 0.5 else b
+        cand = Genome(op, conn, donor.out_gene, donor.w_bits_gene,
+                      donor.a_bits_gene, donor.i_bits_gene, donor.dec_gene)
+        if cand.is_valid(space):
+            return cand
+    return a
+
+
+def describe(g: Genome, space: SearchSpace = DEFAULT_SPACE) -> str:
+    """Fig.-4-style textual rendering of a genome's phenotype."""
+    lines = [f"Input ({g.input_length(space)},2)  quant={g.quant(space).short()}"]
+    l, c = g.input_length(space), 2
+    from repro.hwlib.layers import layer_cost
+    for spec in g.phenotype(space):
+        cost = layer_cost(spec, l, c)
+        l, c = cost.out_len, cost.out_channels
+        lines.append(f"  {spec.short():>12s} [{cost.params}] ({l},{c})")
+    return "\n".join(lines)

@@ -1,0 +1,94 @@
+"""Objective registry — the paper's §VI objective set.
+
+"The optimization objectives are power, energy and latency each with and
+without unrolling, and additionally number of parameters, detection and
+false alarm rate.  All objectives are considered at the same time in the
+Pareto frontier."
+
+Cheap objectives (no training needed) come from the analytic hardware models
+of :mod:`repro.core.hw_model`; expensive objectives (detection / false-alarm
+rate) require candidate training.  All values are oriented for MINIMIZATION.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.genome import Genome
+from repro.core.hw_model import FPGA_ZU, HardwareProfile, estimate
+from repro.core.search_space import DEFAULT_SPACE, SearchSpace
+from repro.core.trainer import TrainResult
+
+# canonical ordering of the 9 paper objectives
+CHEAP_NAMES: Tuple[str, ...] = (
+    "power_min_alpha_w", "power_max_alpha_w",
+    "energy_min_alpha_j", "energy_max_alpha_j",
+    "latency_min_alpha_s", "latency_max_alpha_s",
+    "n_params",
+)
+EXPENSIVE_NAMES: Tuple[str, ...] = ("miss_rate", "false_alarm_rate")
+ALL_NAMES: Tuple[str, ...] = CHEAP_NAMES + EXPENSIVE_NAMES
+
+
+def cheap_objectives(g: Genome, *, profile: HardwareProfile = FPGA_ZU,
+                     space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
+    """The 7 analytic objectives: {power, energy, latency} x {min,max alpha}
+    + parameter count."""
+    est_min = estimate(g, strategy="min", profile=profile, space=space)
+    est_max = estimate(g, strategy="max", profile=profile, space=space)
+    return np.asarray([
+        est_min.p_total_w,
+        est_max.p_total_w,
+        est_min.e_total_j,
+        est_max.e_total_j,
+        est_min.latency_s,
+        est_max.latency_s,
+        float(est_min.params),
+    ], dtype=np.float64)
+
+
+def expensive_objectives(result: TrainResult) -> np.ndarray:
+    """(miss rate, false-alarm rate) — both minimized; miss = 1 - detection."""
+    return np.asarray([1.0 - result.detection_rate,
+                       result.false_alarm_rate], dtype=np.float64)
+
+
+PESSIMISTIC_EXPENSIVE = np.asarray([1.0, 1.0])  # untrained placeholder
+
+
+@dataclasses.dataclass
+class Candidate:
+    """A genome plus every objective value the search knows about."""
+
+    genome: Genome
+    cheap: np.ndarray
+    expensive: Optional[np.ndarray] = None        # None until trained
+    train_result: Optional[TrainResult] = None
+    phash: str = ""
+    generation: int = 0
+
+    def objective_vector(self) -> np.ndarray:
+        exp = self.expensive if self.expensive is not None \
+            else PESSIMISTIC_EXPENSIVE
+        return np.concatenate([self.cheap, exp])
+
+    @property
+    def trained(self) -> bool:
+        return self.expensive is not None
+
+    def meets_constraints(self, det_min: float = 0.90, fa_max: float = 0.20
+                          ) -> bool:
+        if self.expensive is None:
+            return False
+        return (1.0 - self.expensive[0]) >= det_min and \
+            self.expensive[1] <= fa_max
+
+
+def objective_matrix(pop: Sequence[Candidate]) -> np.ndarray:
+    return np.stack([c.objective_vector() for c in pop])
+
+
+def cheap_matrix(pop: Sequence[Candidate]) -> np.ndarray:
+    return np.stack([c.cheap for c in pop])

@@ -1,0 +1,104 @@
+"""Multi-objective machinery: non-dominated sorting, crowding, hypervolume.
+
+All objectives are MINIMIZED.  Callers negate "higher is better" metrics
+(e.g. detection rate) before handing them in.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def dominates(a: np.ndarray, b: np.ndarray, eps: float = 0.0) -> bool:
+    """a epsilon-dominates b: a <= b + eps everywhere, strictly < somewhere."""
+    return bool(np.all(a <= b + eps) and np.any(a < b - eps))
+
+
+def non_dominated_sort(points: np.ndarray) -> List[np.ndarray]:
+    """Fast non-dominated sort (Deb et al.). Returns fronts of indices,
+    front 0 = Pareto-optimal."""
+    n = len(points)
+    if n == 0:
+        return []
+    dominated_by: List[List[int]] = [[] for _ in range(n)]
+    dom_count = np.zeros(n, dtype=np.int64)
+    for i in range(n):
+        for j in range(i + 1, n):
+            if dominates(points[i], points[j]):
+                dominated_by[i].append(j)
+                dom_count[j] += 1
+            elif dominates(points[j], points[i]):
+                dominated_by[j].append(i)
+                dom_count[i] += 1
+    fronts: List[np.ndarray] = []
+    current = np.nonzero(dom_count == 0)[0]
+    while len(current):
+        fronts.append(current)
+        nxt: List[int] = []
+        for i in current:
+            for j in dominated_by[i]:
+                dom_count[j] -= 1
+                if dom_count[j] == 0:
+                    nxt.append(j)
+        current = np.asarray(sorted(nxt), dtype=np.int64)
+    return fronts
+
+
+def pareto_front(points: np.ndarray) -> np.ndarray:
+    """Indices of the non-dominated points."""
+    fronts = non_dominated_sort(points)
+    return fronts[0] if fronts else np.asarray([], dtype=np.int64)
+
+
+def crowding_distance(points: np.ndarray) -> np.ndarray:
+    """NSGA-II crowding distance within one front (inf at the boundary)."""
+    n, m = points.shape
+    if n <= 2:
+        return np.full(n, np.inf)
+    dist = np.zeros(n)
+    for k in range(m):
+        order = np.argsort(points[:, k], kind="stable")
+        span = points[order[-1], k] - points[order[0], k]
+        dist[order[0]] = dist[order[-1]] = np.inf
+        if span <= 0:
+            continue
+        gaps = (points[order[2:], k] - points[order[:-2], k]) / span
+        dist[order[1:-1]] += gaps
+    return dist
+
+
+def environmental_selection(points: np.ndarray, capacity: int) -> np.ndarray:
+    """Keep `capacity` indices: fill whole fronts, break ties by crowding."""
+    keep: List[int] = []
+    for front in non_dominated_sort(points):
+        if len(keep) + len(front) <= capacity:
+            keep.extend(front.tolist())
+        else:
+            need = capacity - len(keep)
+            cd = crowding_distance(points[front])
+            order = np.argsort(-cd, kind="stable")
+            keep.extend(front[order[:need]].tolist())
+            break
+    return np.asarray(sorted(keep), dtype=np.int64)
+
+
+def hypervolume_2d(points: np.ndarray, ref: np.ndarray) -> float:
+    """Exact 2-D hypervolume (minimization) w.r.t. reference point."""
+    front = points[pareto_front(points)]
+    front = front[np.argsort(front[:, 0])]
+    hv, prev_y = 0.0, ref[1]
+    for x, y in front:
+        if x >= ref[0] or y >= prev_y:
+            continue
+        hv += (ref[0] - x) * (prev_y - y)
+        prev_y = y
+    return float(hv)
+
+
+def normalize(points: np.ndarray) -> np.ndarray:
+    """Per-objective min-max normalization (degenerate dims -> 0)."""
+    lo = points.min(axis=0)
+    hi = points.max(axis=0)
+    span = np.where(hi - lo > 1e-12, hi - lo, 1.0)
+    return (points - lo) / span

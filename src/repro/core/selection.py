@@ -1,0 +1,84 @@
+"""LEMONADE-style Bayesian two-step selection (paper §III-A, via Elsken'18).
+
+"For the selection strategy, we use a similar, bayesian-based method as [13],
+which explores the Pareto Frontier of DNN candidates efficiently in a
+two-step procedure, preselecting candidates based on computationally
+inexpensive objectives first."
+
+Mechanics: a kernel-density estimate (KDE) is fit over the *cheap* objective
+values of the current population.  (1) Parents are sampled with probability
+proportional to 1/density — favoring sparse regions of the cheap-objective
+space; (2) generated children are preselected for *expensive* evaluation with
+the same inverse-density weighting, so training budget flows to candidates
+that extend the frontier rather than duplicate it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.pareto import normalize
+
+
+class GaussianKDE:
+    """Minimal Gaussian KDE with Scott's-rule bandwidth (no scipy on box)."""
+
+    def __init__(self, data: np.ndarray):
+        data = np.atleast_2d(np.asarray(data, dtype=np.float64))
+        if data.ndim != 2:
+            raise ValueError("data must be (n, d)")
+        self.data = data
+        n, d = data.shape
+        sigma = data.std(axis=0)
+        sigma = np.where(sigma > 1e-9, sigma, 1.0)
+        self.h = sigma * max(n, 2) ** (-1.0 / (d + 4))  # Scott's rule
+
+    def density(self, x: np.ndarray) -> np.ndarray:
+        x = np.atleast_2d(np.asarray(x, dtype=np.float64))
+        # (m, n, d) standardized distances
+        z = (x[:, None, :] - self.data[None, :, :]) / self.h[None, None, :]
+        k = np.exp(-0.5 * np.sum(z * z, axis=-1))
+        norm = np.prod(self.h) * (2 * np.pi) ** (self.data.shape[1] / 2)
+        return k.sum(axis=1) / (len(self.data) * norm) + 1e-300
+
+
+def inverse_density_weights(pop_cheap: np.ndarray,
+                            query_cheap: Optional[np.ndarray] = None
+                            ) -> np.ndarray:
+    """Normalized sampling weights ∝ 1/KDE-density in cheap-objective space."""
+    pop_n = normalize(pop_cheap)
+    kde = GaussianKDE(pop_n)
+    if query_cheap is None:
+        q = pop_n
+    else:
+        # normalize queries with the population's scaling
+        lo = pop_cheap.min(axis=0)
+        hi = pop_cheap.max(axis=0)
+        span = np.where(hi - lo > 1e-12, hi - lo, 1.0)
+        q = (query_cheap - lo) / span
+    w = 1.0 / kde.density(q)
+    w = np.where(np.isfinite(w), w, 0.0)
+    s = w.sum()
+    if s <= 0:
+        return np.full(len(q), 1.0 / len(q))
+    return w / s
+
+
+def sample_parents(rng: np.random.Generator, pop_cheap: np.ndarray,
+                   n: int) -> np.ndarray:
+    """Indices of `n` parents sampled inverse-density (with replacement)."""
+    w = inverse_density_weights(pop_cheap)
+    return rng.choice(len(pop_cheap), size=n, replace=True, p=w)
+
+
+def preselect_children(rng: np.random.Generator, pop_cheap: np.ndarray,
+                       child_cheap: np.ndarray, n_accept: int) -> np.ndarray:
+    """Step 2: pick children for expensive evaluation, inverse-density
+    weighted against the *current population's* cheap-objective KDE."""
+    if len(child_cheap) <= n_accept:
+        return np.arange(len(child_cheap))
+    w = inverse_density_weights(pop_cheap, child_cheap)
+    if not np.all(np.isfinite(w)) or w.sum() <= 0:
+        return rng.choice(len(child_cheap), size=n_accept, replace=False)
+    return rng.choice(len(child_cheap), size=n_accept, replace=False, p=w)

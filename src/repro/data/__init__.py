@@ -1,0 +1,2 @@
+"""Data pipelines: synthetic ECG (Charité stand-in) and LM token streams."""
+from repro.data.ecg import make_ecg_dataset  # noqa: F401

@@ -1,0 +1,10 @@
+"""Distributed runtime: logical-axis sharding rules, mesh helpers,
+gradient compression, fault tolerance."""
+from repro.distributed.sharding import (  # noqa: F401
+    axis_rules,
+    current_mesh,
+    logical_constraint,
+    named_sharding,
+    spec_for,
+    tree_shardings,
+)

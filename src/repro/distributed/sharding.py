@@ -1,0 +1,195 @@
+"""Logical-axis sharding: the bridge from model code to the physical mesh.
+
+Model code annotates parameters and activations with *logical* axis names
+("embed", "heads", "batch", ...).  The launcher installs a rule set mapping
+logical names to physical mesh axes ("pod", "data", "model") for the current
+run; everything composes through an ambient context so model code never
+mentions physical axes.  With no rules installed (unit tests on CPU) every
+annotation is a no-op.
+
+Default mapping (DESIGN.md §5):
+
+* ``batch``  -> ("pod", "data")   — data parallelism
+* ``embed``  -> "data"            — FSDP weight sharding (all-gather per layer)
+* ``heads`` / ``kv_heads`` / ``mlp`` / ``vocab`` -> "model" — tensor parallelism
+* ``experts`` -> "model"          — expert parallelism
+* ``layers`` / ``seq`` -> None    — unsharded by default (seq-parallel is a
+  per-cell override used by the perf pass)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Physical = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def default_rules(multi_pod: bool = False) -> Dict[str, Physical]:
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch_axes,
+        "seq": None,
+        "embed": "data",          # FSDP axis of every weight matrix
+        "embed_unsharded": None,
+        "heads": "model",         # TP over the flattened h*hd projection dim
+        # kv projections replicate across TP ranks (kv_heads < 16 for every
+        # assigned arch); KV *caches* shard their head_dim axis instead.
+        "kv_heads": None,
+        "head_dim": "model",
+        "mlp": "model",
+        "expert_mlp": None,
+        "experts": "model",       # expert parallelism
+        "vocab": "model",
+        "layers": None,
+        "layer_groups": None,
+    }
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[Dict[str, Physical]], mesh: Optional[Mesh]):
+    """Install (rules, mesh) for the enclosed region."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (rules, mesh)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_rules() -> Optional[Dict[str, Physical]]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[1] if ctx else None
+
+
+def _resolve(axis: Optional[str], rules: Dict[str, Physical],
+             mesh: Mesh, taken: set) -> Physical:
+    """Map one logical axis; drop physical axes already used or absent."""
+    if axis is None:
+        return None
+    phys = rules.get(axis)
+    if phys is None:
+        return None
+    if isinstance(phys, str):
+        phys = (phys,)
+    usable = tuple(a for a in phys if a in mesh.axis_names and a not in taken)
+    taken.update(usable)
+    if not usable:
+        return None
+    return usable if len(usable) > 1 else usable[0]
+
+
+def spec_for(logical_axes: Sequence[Optional[str]],
+             rules: Optional[Dict[str, Physical]] = None,
+             mesh: Optional[Mesh] = None) -> P:
+    rules = rules if rules is not None else current_rules()
+    mesh = mesh if mesh is not None else current_mesh()
+    if rules is None or mesh is None:
+        return P()
+    taken: set = set()
+    return P(*[_resolve(a, rules, mesh, taken) for a in logical_axes])
+
+
+def named_sharding(logical_axes: Sequence[Optional[str]],
+                   rules=None, mesh=None) -> Optional[NamedSharding]:
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(logical_axes, rules, mesh))
+
+
+def logical_constraint(x: jax.Array, *logical_axes: Optional[str]
+                       ) -> jax.Array:
+    """`with_sharding_constraint` by logical names; no-op without rules."""
+    rules, mesh = current_rules(), current_mesh()
+    if rules is None or mesh is None:
+        return x
+    # trailing axes not named are unsharded
+    axes = list(logical_axes) + [None] * (x.ndim - len(logical_axes))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(axes, rules, mesh)))
+
+
+def shardings_like(template: Any, spec_tree: Any, rules=None, mesh=None
+                   ) -> Any:
+    """NamedShardings for ``template``'s structure from a parallel tree of
+    logical-axis tuples (tuples are leaves of ``spec_tree``)."""
+    mesh = mesh if mesh is not None else current_mesh()
+    rules = rules if rules is not None else current_rules()
+    treedef = jax.tree_util.tree_structure(template)
+    spec_leaves = treedef.flatten_up_to(spec_tree)
+    shard_leaves = [
+        NamedSharding(mesh, spec_for(s if s is not None else (), rules, mesh))
+        for s in spec_leaves]
+    return jax.tree_util.tree_unflatten(treedef, shard_leaves)
+
+
+def validate_divisibility(template: Any, spec_tree: Any, rules,
+                          mesh_shape: Dict[str, int]) -> list:
+    """Static launch-time check: every sharded dim must divide evenly.
+
+    Returns a list of human-readable violations (empty == valid).  Works on
+    ShapeDtypeStructs + logical specs with no devices required, so configs
+    are validated before any compile is attempted.
+    """
+    problems = []
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = treedef.flatten_up_to(spec_tree)
+    shapes = jax.tree_util.tree_leaves(template)
+    names = [_path_str_safe(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(template)[0]]
+    for name, sds, axes in zip(names, shapes, leaves):
+        if axes is None:
+            continue
+        taken: set = set()
+        for dim, logical in enumerate(axes):
+            if logical is None or dim >= len(sds.shape):
+                continue
+            phys = rules.get(logical)
+            if phys is None:
+                continue
+            if isinstance(phys, str):
+                phys = (phys,)
+            usable = [a for a in phys
+                      if a in mesh_shape and a not in taken]
+            taken.update(usable)
+            total = 1
+            for a in usable:
+                total *= mesh_shape[a]
+            if total > 1 and sds.shape[dim] % total:
+                problems.append(
+                    f"{name}: dim {dim} ({logical}) size {sds.shape[dim]} "
+                    f"not divisible by {total} ({usable})")
+    return problems
+
+
+def _path_str_safe(path) -> str:
+    out = []
+    for p in path:
+        out.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return ".".join(out)
+
+
+def tree_shardings(spec_tree: Any, rules=None, mesh=None) -> Any:
+    """Map a tree of logical-axis tuples to NamedShardings (for jit
+    in_shardings/out_shardings)."""
+    mesh = mesh if mesh is not None else current_mesh()
+    rules = rules if rules is not None else current_rules()
+
+    def one(axes):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, spec_for(axes, rules, mesh))
+
+    return jax.tree_util.tree_map(
+        one, spec_tree, is_leaf=lambda s: isinstance(s, tuple) or s is None)

@@ -1,0 +1,14 @@
+"""Parametrizable layer library — the TPU analogue of HALF's HLS hardware library.
+
+Each layer couples a JAX forward implementation with an analytic cost model
+(MACs/output, pipeline fill depth, parameter count) so the NAS can score
+candidates without compiling them.  See DESIGN.md §2 for the FPGA→TPU mapping.
+"""
+from repro.hwlib.layers import (  # noqa: F401
+    LayerCost,
+    LayerSpec,
+    apply_layer,
+    init_layer,
+    layer_cost,
+    out_shape,
+)

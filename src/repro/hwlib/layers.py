@@ -1,0 +1,205 @@
+"""Layer library: forward implementations paired with analytic cost models.
+
+Layout convention: activations are ``(batch, length, channels)`` float32 (the
+NAS trains small candidates) with optional fake quantization applied around
+each layer (see :mod:`repro.hwlib.quant`).
+
+The cost model mirrors the paper's hardware library semantics (§IV/§V):
+
+* ``n_in``  — number of input values needed before the layer can emit its
+  first output (pipeline fill; kernel size for convolutions).
+* ``l``     — cycles to produce one output *position* at unrolling factor
+  α = 1 (== MACs per output position, one MAC unit).
+* unrolling α divides ``l`` (spatial parallelism over the dot products),
+  bounded by ``alpha_max`` = MACs per output position.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+
+# Layer kinds understood by the library.
+DWSEP_CONV = "dwsep_conv"  # depthwise-separable 1D convolution (+BN+ReLU)
+MAXPOOL = "maxpool"        # 1D max pooling, window == stride
+GLOBALPOOL = "globalpool"  # global average pooling over length
+DENSE = "dense"            # fully connected head
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """A fully parametrized layer instance (one gene's phenotype)."""
+
+    kind: str
+    out_channels: int = 0   # dw-sep conv / dense
+    kernel_size: int = 1    # dw-sep conv
+    stride: int = 1         # dw-sep conv / maxpool
+    use_bn: bool = True     # dw-sep conv only
+
+    def short(self) -> str:
+        if self.kind == DWSEP_CONV:
+            return f"dw{self.kernel_size}s{self.stride}c{self.out_channels}"
+        if self.kind == MAXPOOL:
+            return f"mp{self.stride}"
+        if self.kind == GLOBALPOOL:
+            return "gap"
+        return f"fc{self.out_channels}"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCost:
+    """Analytic per-layer quantities consumed by the Eq.1-4 models."""
+
+    n_in: int           # values to fill the input buffer (Eq. 1: n_in,j)
+    l_cycles: float     # latency (cycles) to produce one output position, α=1
+    n_out: int          # number of output positions the layer produces
+    macs_per_out: int   # MACs per output position (== alpha_max)
+    total_macs: int     # n_out * macs_per_out
+    params: int         # parameter count (weights + bias, BN folded)
+    out_len: int
+    out_channels: int
+
+    @property
+    def alpha_max(self) -> int:
+        return max(1, self.macs_per_out)
+
+
+# ---------------------------------------------------------------------------
+# Shape / cost analysis (pure python — cheap objectives must not trace JAX)
+# ---------------------------------------------------------------------------
+
+def out_shape(spec: LayerSpec, in_len: int, in_ch: int) -> Tuple[int, int]:
+    """(out_len, out_channels) for a layer applied to (in_len, in_ch)."""
+    if spec.kind == DWSEP_CONV:
+        if in_len < spec.kernel_size:
+            raise ValueError(
+                f"input length {in_len} < kernel {spec.kernel_size}")
+        out_len = (in_len - spec.kernel_size) // spec.stride + 1
+        return out_len, spec.out_channels
+    if spec.kind == MAXPOOL:
+        if in_len < spec.stride:
+            raise ValueError(f"input length {in_len} < pool {spec.stride}")
+        return in_len // spec.stride, in_ch
+    if spec.kind == GLOBALPOOL:
+        return 1, in_ch
+    if spec.kind == DENSE:
+        return 1, spec.out_channels
+    raise ValueError(spec.kind)
+
+
+def layer_cost(spec: LayerSpec, in_len: int, in_ch: int) -> LayerCost:
+    out_len, out_ch = out_shape(spec, in_len, in_ch)
+    if spec.kind == DWSEP_CONV:
+        # depthwise: K MACs per channel, pointwise: C_in MACs per out channel.
+        macs = spec.kernel_size * in_ch + in_ch * out_ch
+        params = spec.kernel_size * in_ch + in_ch * out_ch + out_ch  # +bias
+        n_in = spec.kernel_size
+    elif spec.kind == MAXPOOL:
+        macs = spec.stride * in_ch  # comparisons ~ MAC-equivalents
+        params = 0
+        n_in = spec.stride
+    elif spec.kind == GLOBALPOOL:
+        macs = in_len * in_ch  # running sum — counted once for its single out
+        params = 0
+        n_in = in_len
+    else:  # DENSE
+        macs = in_ch * out_ch
+        params = in_ch * out_ch + out_ch
+        n_in = in_ch
+    return LayerCost(
+        n_in=n_in,
+        l_cycles=float(macs),
+        n_out=out_len,
+        macs_per_out=macs,
+        total_macs=out_len * macs,
+        params=params,
+        out_len=out_len,
+        out_channels=out_ch,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameters & forward
+# ---------------------------------------------------------------------------
+
+def init_layer(rng: jax.Array, spec: LayerSpec, in_ch: int) -> Dict[str, Any]:
+    """He-style init. Returns {} for parameter-free layers."""
+    if spec.kind == DWSEP_CONV:
+        k_dw, k_pw, _ = jax.random.split(rng, 3)
+        fan_dw = spec.kernel_size
+        fan_pw = in_ch
+        params: Dict[str, Any] = {
+            "dw": jax.random.normal(k_dw, (spec.kernel_size, in_ch),
+                                    jnp.float32) * math.sqrt(2.0 / fan_dw),
+            "pw": jax.random.normal(k_pw, (in_ch, spec.out_channels),
+                                    jnp.float32) * math.sqrt(2.0 / fan_pw),
+            "b": jnp.zeros((spec.out_channels,), jnp.float32),
+        }
+        if spec.use_bn:
+            params["bn_scale"] = jnp.ones((spec.out_channels,), jnp.float32)
+            params["bn_bias"] = jnp.zeros((spec.out_channels,), jnp.float32)
+            # running stats are updated outside jit during training
+            params["bn_mean"] = jnp.zeros((spec.out_channels,), jnp.float32)
+            params["bn_var"] = jnp.ones((spec.out_channels,), jnp.float32)
+        return params
+    if spec.kind == DENSE:
+        k_w, _ = jax.random.split(rng)
+        return {
+            "w": jax.random.normal(k_w, (in_ch, spec.out_channels),
+                                   jnp.float32) * math.sqrt(1.0 / in_ch),
+            "b": jnp.zeros((spec.out_channels,), jnp.float32),
+        }
+    return {}
+
+
+def _depthwise_conv1d(x: jnp.ndarray, w: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """x: (B, L, C), w: (K, C) -> (B, L_out, C). VALID padding."""
+    k = w.shape[0]
+    l_out = (x.shape[1] - k) // stride + 1
+    # Gather K strided views and contract — compiles to K fused mul-adds,
+    # matching the hardware library's shift-register formulation.
+    acc = jnp.zeros((x.shape[0], l_out, x.shape[2]), x.dtype)
+    for i in range(k):
+        sl = jax.lax.slice_in_dim(x, i, i + (l_out - 1) * stride + 1, stride, 1)
+        acc = acc + sl * w[i]
+    return acc
+
+
+def apply_layer(
+    params: Dict[str, Any],
+    spec: LayerSpec,
+    x: jnp.ndarray,
+    *,
+    train: bool = False,
+) -> jnp.ndarray:
+    """Forward one layer. x: (B, L, C) except DENSE, which takes (B, C)."""
+    if spec.kind == DWSEP_CONV:
+        h = _depthwise_conv1d(x, params["dw"], spec.stride)
+        h = jnp.einsum("blc,cd->bld", h, params["pw"]) + params["b"]
+        # BN-folded params drop the bn_* keys: the spec may still say use_bn
+        if spec.use_bn and "bn_scale" in params:
+            if train:
+                mean = jnp.mean(h, axis=(0, 1))
+                var = jnp.var(h, axis=(0, 1))
+            else:
+                mean, var = params["bn_mean"], params["bn_var"]
+            h = (h - mean) * jax.lax.rsqrt(var + 1e-5)
+            h = h * params["bn_scale"] + params["bn_bias"]
+        return jax.nn.relu(h)
+    if spec.kind == MAXPOOL:
+        s = spec.stride
+        l_out = x.shape[1] // s
+        h = x[:, : l_out * s].reshape(x.shape[0], l_out, s, x.shape[2])
+        return jnp.max(h, axis=2)
+    if spec.kind == GLOBALPOOL:
+        return jnp.mean(x, axis=1)  # (B, C)
+    if spec.kind == DENSE:
+        return x @ params["w"] + params["b"]
+    raise ValueError(spec.kind)

@@ -1,0 +1,73 @@
+"""Accumulator-precision profiler (paper §III-B).
+
+"While the quantization of weights and activations is provided by the NAS,
+the quantization for the internal accumulators is found by profiling.  The
+profiler identifies the optimal range and precision for all accumulators in
+the hardware and sets the bit widths accordingly."
+
+We reproduce this as a calibration pass: run a calibration batch through the
+model, record per-layer accumulator ranges (pre-activation values before any
+rounding), and derive fixed-point formats ``Q(int_bits, frac_bits)`` that
+cover the observed range with a target quantization SNR.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Sequence
+
+import jax.numpy as jnp
+
+from repro.hwlib.layers import DWSEP_CONV, DENSE, LayerSpec, apply_layer
+
+
+@dataclasses.dataclass(frozen=True)
+class AccumulatorFormat:
+    """Fixed-point format of one layer's accumulator."""
+
+    int_bits: int    # integer bits incl. sign
+    frac_bits: int
+
+    @property
+    def total_bits(self) -> int:
+        return self.int_bits + self.frac_bits
+
+
+def _format_for_range(max_abs: float, frac_bits: int) -> AccumulatorFormat:
+    # bits to represent +-max_abs: ceil(log2(max_abs + 1)) + sign
+    int_bits = max(1, int(math.ceil(math.log2(max(max_abs, 1e-8) + 1.0))) + 1)
+    return AccumulatorFormat(int_bits=int_bits, frac_bits=frac_bits)
+
+
+def profile_accumulators(
+    params_list: Sequence[Dict[str, Any]],
+    specs: Sequence[LayerSpec],
+    x_calib: jnp.ndarray,
+    *,
+    frac_bits: int = 8,
+) -> List[AccumulatorFormat]:
+    """Run the calibration batch, return one format per layer.
+
+    Only layers with accumulators (convs and dense) get a real profile; pools
+    get the pass-through format of their input.
+    """
+    formats: List[AccumulatorFormat] = []
+    h = x_calib
+    prev = _format_for_range(float(jnp.max(jnp.abs(h))), frac_bits)
+    for p, s in zip(params_list, specs):
+        h = apply_layer(p, s, h, train=False)
+        if s.kind in (DWSEP_CONV, DENSE):
+            fmt = _format_for_range(float(jnp.max(jnp.abs(h))), frac_bits)
+        else:
+            fmt = prev
+        formats.append(fmt)
+        prev = fmt
+    return formats
+
+
+def accumulator_report(formats: Sequence[AccumulatorFormat],
+                       specs: Sequence[LayerSpec]) -> str:
+    lines = ["layer,kind,int_bits,frac_bits,total_bits"]
+    for i, (f, s) in enumerate(zip(formats, specs)):
+        lines.append(f"{i},{s.kind},{f.int_bits},{f.frac_bits},{f.total_bits}")
+    return "\n".join(lines)

@@ -1,0 +1,84 @@
+"""Quantization utilities: fake-quant, batchnorm folding.
+
+The paper's NAS search space includes the quantization of inputs, weights and
+feature maps (§III-A); accumulator precision is set post-hoc by the profiler
+(§III-B, :mod:`repro.hwlib.profiler`).  We implement symmetric fixed-point
+fake quantization with straight-through gradients, which is both trainable
+(QAT) and directly interpretable as bit widths of the hardware datapath.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.hwlib.layers import DWSEP_CONV, LayerSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Bit widths for the three fake-quantized tensor classes."""
+
+    weight_bits: int = 8
+    act_bits: int = 8
+    input_bits: int = 8
+
+    def short(self) -> str:
+        return f"w{self.weight_bits}a{self.act_bits}i{self.input_bits}"
+
+
+def fake_quant(x: jnp.ndarray, bits: int, *, per_channel_axis: int | None = None
+               ) -> jnp.ndarray:
+    """Symmetric fake quantization with a straight-through estimator.
+
+    ``bits <= 0`` or ``bits >= 32`` disables quantization (identity).
+    """
+    if bits <= 0 or bits >= 32:
+        return x
+    qmax = 2.0 ** (bits - 1) - 1.0
+    if per_channel_axis is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    else:
+        axes = tuple(i for i in range(x.ndim) if i != per_channel_axis)
+        scale = jnp.maximum(jnp.max(jnp.abs(x), axis=axes, keepdims=True),
+                            1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax) * scale
+    # straight-through: forward q, backward identity
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def quantize_layer_params(params: Dict[str, Any], spec: LayerSpec,
+                          cfg: QuantConfig) -> Dict[str, Any]:
+    """Apply weight fake-quant to a layer's parameter dict."""
+    out = dict(params)
+    for name in ("dw", "pw", "w"):
+        if name in out:
+            out[name] = fake_quant(out[name], cfg.weight_bits,
+                                   per_channel_axis=out[name].ndim - 1)
+    return out
+
+
+def fold_batchnorm(params: Dict[str, Any], spec: LayerSpec) -> Dict[str, Any]:
+    """Fold BN running stats into the pointwise conv weights + bias.
+
+    Paper §III-A: "preprocessing and tuning techniques such as
+    batchnorm-folding are applied to further compress the model" before the
+    topology is handed to the implementation framework.  After folding the
+    layer computes ``relu(dw/pw conv + b')`` with no BN at inference.
+    """
+    if spec.kind != DWSEP_CONV or "bn_scale" not in params:
+        return params
+    scale = params["bn_scale"] * jax.lax.rsqrt(params["bn_var"] + 1e-5)
+    folded = {
+        "dw": params["dw"],
+        "pw": params["pw"] * scale[None, :],
+        "b": (params["b"] - params["bn_mean"]) * scale + params["bn_bias"],
+    }
+    return folded
+
+
+def fold_model(params_list, specs) -> list:
+    """Fold BN for every layer of a decoded candidate."""
+    return [fold_batchnorm(p, s) for p, s in zip(params_list, specs)]

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each subpackage: ``kernel.py`` (pl.pallas_call + BlockSpec VMEM tiling),
+``ops.py`` (jit'd public wrapper with an interpret switch), ``ref.py``
+(pure-jnp oracle).  On this CPU container kernels run interpret=True;
+on TPU the same pallas_call lowers natively.
+"""

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused depthwise-separable 1D conv + bias + ReLU.
+
+TPU adaptation of HALF's dataflow conv engine (DESIGN.md §2): instead of an
+FPGA shift-register pipeline, the record is tiled into VMEM and the pointwise
+(1x1) stage is fed to the MXU as an (L_out, C_in) x (C_in, BCO) matmul — the
+depthwise stage is a K-tap fused multiply-add chain on the VPU.
+
+Grid: ``(B, n_cout_blocks)`` — output-channel blocks are the innermost
+(fastest) axis, so the depthwise result, which is independent of the output
+channel, is computed once per record at ``j == 0`` into a VMEM scratch and
+reused for the remaining C_out blocks (the TPU grid is sequential).
+
+VMEM budget per step (f32): x tile L*C_in + scratch L_out*C_in
++ pw C_in*BCO + out L_out*BCO.  For the ECG search space (L <= 3750,
+C <= 32, BCO = 128) that is < 2.5 MB — comfortably inside one core's VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BCO = 128
+
+
+def _kernel(x_ref, dw_ref, pw_ref, b_ref, o_ref, dw_scratch, *,
+            stride: int, relu: bool, l_out: int):
+    j = pl.program_id(1)
+
+    # depthwise stage: compute once per record (j == 0), reuse afterwards
+    @pl.when(j == 0)
+    def _():
+        xv = x_ref[0]                       # (L, C_in) in VMEM
+        k = dw_ref.shape[0]
+        c_in = xv.shape[1]
+        acc = jnp.zeros((l_out, c_in), jnp.float32)
+        for i in range(k):                  # K-tap FMA chain (VPU)
+            sl = jax.lax.slice(xv, (i, 0),
+                               (i + (l_out - 1) * stride + 1, c_in),
+                               (stride, 1))
+            acc = acc + sl.astype(jnp.float32) * dw_ref[i].astype(jnp.float32)
+        dw_scratch[...] = acc
+
+    # pointwise stage: (L_out, C_in) @ (C_in, BCO) on the MXU
+    y = jax.lax.dot_general(
+        dw_scratch[...], pw_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y = y + b_ref[...].astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def dwsep_conv1d_pallas(x: jnp.ndarray, dw: jnp.ndarray, pw: jnp.ndarray,
+                        b: jnp.ndarray, *, stride: int = 1, relu: bool = True,
+                        block_cout: int = DEFAULT_BCO,
+                        interpret: bool = False) -> jnp.ndarray:
+    bsz, l, c_in = x.shape
+    k = dw.shape[0]
+    c_out = pw.shape[1]
+    l_out = (l - k) // stride + 1
+    bco = min(block_cout, c_out)
+    n_co = -(-c_out // bco)
+    pad_co = n_co * bco - c_out
+    if pad_co:
+        pw = jnp.pad(pw, ((0, 0), (0, pad_co)))
+        b = jnp.pad(b, (0, pad_co))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, stride=stride, relu=relu, l_out=l_out),
+        grid=(bsz, n_co),
+        in_specs=[
+            pl.BlockSpec((1, l, c_in), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((k, c_in), lambda i, j: (0, 0)),
+            pl.BlockSpec((c_in, bco), lambda i, j: (0, j)),
+            pl.BlockSpec((bco,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, l_out, bco), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, l_out, n_co * bco), x.dtype),
+        scratch_shapes=[pltpu.VMEM((l_out, c_in), jnp.float32)],
+        interpret=interpret,
+    )(x, dw, pw, b)
+    return out[:, :, :c_out]

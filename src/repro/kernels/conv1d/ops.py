@@ -1,0 +1,33 @@
+"""Public op: depthwise-separable conv1d (Pallas on TPU, oracle elsewhere)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv1d.kernel import dwsep_conv1d_pallas
+from repro.kernels.conv1d.ref import dwsep_conv1d_ref
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "relu", "impl",
+                                             "interpret"))
+def dwsep_conv1d(x: jnp.ndarray, dw: jnp.ndarray, pw: jnp.ndarray,
+                 b: jnp.ndarray, *, stride: int = 1, relu: bool = True,
+                 impl: str = "pallas", interpret: bool = True) -> jnp.ndarray:
+    """Fused depthwise-separable 1D convolution.
+
+    Args:
+      x:  (B, L, C_in); dw: (K, C_in); pw: (C_in, C_out); b: (C_out,).
+      impl: "pallas" (TPU kernel; interpret=True executes it on CPU) or
+        "ref" (pure jnp oracle).
+    """
+    if x.ndim != 3 or dw.ndim != 2 or pw.ndim != 2:
+        raise ValueError("bad ranks")
+    if dw.shape[1] != x.shape[2] or pw.shape[0] != x.shape[2] \
+            or b.shape[0] != pw.shape[1]:
+        raise ValueError("inconsistent channel dims")
+    if impl == "ref":
+        return dwsep_conv1d_ref(x, dw, pw, b, stride=stride, relu=relu)
+    return dwsep_conv1d_pallas(x, dw, pw, b, stride=stride, relu=relu,
+                               interpret=interpret)

@@ -1,0 +1,25 @@
+"""Oracle for the depthwise-separable 1D convolution (HALF's hot spot)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dwsep_conv1d_ref(x: jnp.ndarray, dw: jnp.ndarray, pw: jnp.ndarray,
+                     b: jnp.ndarray, *, stride: int = 1,
+                     relu: bool = True) -> jnp.ndarray:
+    """x: (B, L, C_in), dw: (K, C_in), pw: (C_in, C_out), b: (C_out,).
+
+    VALID padding: L_out = (L - K) // stride + 1.
+    """
+    k = dw.shape[0]
+    l_out = (x.shape[1] - k) // stride + 1
+    acc = jnp.zeros((x.shape[0], l_out, x.shape[2]), jnp.float32)
+    for i in range(k):
+        sl = jax.lax.slice_in_dim(x, i, i + (l_out - 1) * stride + 1,
+                                  stride, 1)
+        acc = acc + sl.astype(jnp.float32) * dw[i].astype(jnp.float32)
+    y = acc @ pw.astype(jnp.float32) + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)

@@ -1,0 +1,22 @@
+"""Public op: decode attention (Pallas on TPU, oracle elsewhere)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret", "block_k"))
+def decode_attention(q, k, v, kv_len, *, impl: str = "pallas",
+                     interpret: bool = True, block_k: int = 512
+                     ) -> jnp.ndarray:
+    """Single-token GQA attention. q: (B,H,hd); k/v: (B,S,KVH,hd);
+    kv_len: (B,) valid prefix lengths."""
+    if impl == "ref":
+        return decode_attention_ref(q, k, v, kv_len)
+    return decode_attention_pallas(q, k, v, kv_len, block_k=block_k,
+                                   interpret=interpret)

@@ -1,0 +1,22 @@
+"""Oracle: single-token GQA attention over a (padded) KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         kv_len: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, H, hd); k/v: (B, S, KVH, hd); kv_len: (B,) valid prefix.
+
+    Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, kvh, rep, hd).astype(jnp.float32) / (hd ** 0.5)
+    scores = jnp.einsum("bgrd,bsgd->bgrs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(s)[None, :] < kv_len[:, None]          # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)

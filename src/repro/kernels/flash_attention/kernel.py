@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+Canonical blocked online-softmax: grid ``(B, H, n_q, n_kv)`` with the KV
+block axis innermost (sequential on TPU), so the running max / denominator /
+accumulator live in VMEM scratch across KV steps and the output block is
+written once at the last KV step.
+
+* GQA: the K/V BlockSpec index maps head ``h`` to KV head ``h // rep`` —
+  no repeated KV materialization.
+* Causality: blocks entirely above the diagonal are skipped via ``pl.when``
+  (no MXU work), the diagonal block is masked elementwise.
+
+VMEM per step (f32): q BQ*hd + k/v 2*BK*hd + acc BQ*hd + scores BQ*BK.
+BQ = BK = 512, hd = 128 → ~2.6 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, n_kv: int, causal: bool, scale: float):
+    i = pl.program_id(2)   # q block
+    j = pl.program_id(3)   # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip fully-masked blocks (strictly above the causal diagonal)
+    if causal:
+        run_pred = j * bk < (i + 1) * bq
+    else:
+        run_pred = jnp.bool_(True)
+
+    @pl.when(run_pred)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (BK, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,          # (B, Sq, H, hd)
+    k: jnp.ndarray,          # (B, Sk, KVH, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0
+    rep = h // kvh
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, "pad seq to block multiples"
+    n_q, n_kv = sq // bq, sk // bk
+
+    # (B, S, H, hd) -> (B, H, S, hd) for head-major blocking
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, n_kv=n_kv, causal=causal,
+                          scale=1.0 / (hd ** 0.5)),
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, h_, i, j: (b_, h_ // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b_, h_, i, j: (b_, h_ // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.swapaxes(1, 2)

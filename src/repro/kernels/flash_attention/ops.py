@@ -1,0 +1,22 @@
+"""Public op: flash attention (Pallas on TPU, chunked-jnp / oracle elsewhere)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl", "interpret",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, impl: str = "pallas",
+                    interpret: bool = True, block_q: int = 512,
+                    block_k: int = 512) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KVH, hd)."""
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal)
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)

@@ -1,0 +1,22 @@
+"""Oracle: full-softmax attention (materializes scores — small shapes only)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool = True) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KVH, hd) with H % KVH == 0."""
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, sq, kvh, rep, hd)
+    s = jnp.einsum("bqgrd,bkgd->bqgrk", qf, k.astype(jnp.float32))
+    s = s / (hd ** 0.5)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqgrk,bkgd->bqgrd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)

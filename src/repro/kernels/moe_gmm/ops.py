@@ -1,0 +1,22 @@
+"""Public op: grouped matmul for MoE expert FFNs."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gmm.kernel import gmm_pallas
+from repro.kernels.moe_gmm.ref import gmm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret", "block_c",
+                                             "block_f", "block_d"))
+def gmm(x, w, *, impl: str = "pallas", interpret: bool = True,
+        block_c: int = 512, block_f: int = 512, block_d: int = 512
+        ) -> jnp.ndarray:
+    """Grouped matmul: (E, C, D) @ (E, D, F) -> (E, C, F)."""
+    if impl == "ref":
+        return gmm_ref(x, w)
+    return gmm_pallas(x, w, block_c=block_c, block_f=block_f,
+                      block_d=block_d, interpret=interpret)

@@ -1,0 +1,10 @@
+"""Oracle: grouped (expert-batched) matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (E, C, D), w: (E, D, F) -> (E, C, F) in f32 accumulation."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (forward).
+
+Grid ``(B, H, n_chunks)`` — the chunk axis is innermost/sequential, so the
+(N, P) inter-chunk state lives in VMEM scratch across chunk steps (the same
+sequential-grid carry pattern as the flash-attention kernel's softmax state).
+
+Per chunk (Q = chunk length):
+  intra:  M = tril(C B^T ⊙ exp(Δcum)) ; Y += M @ (dt·X)      (MXU: Q×N×Q, Q×Q×P)
+  inter:  Y += exp(cum) * (C @ state)                        (MXU: Q×N×P)
+  state:  state = exp(total) * state + (w·B)^T @ (dt·X)      (MXU: N×Q×P)
+
+VMEM per step (f32): x/b/c/out chunks Q*(2N+2P) + scores Q² + state N*P.
+Q = 256, N = 128, P = 64 → ~0.7 MB.
+
+B/C head-group mapping (GQA-style groups) is done by the BlockSpec index map
+(``h // rep``), mirroring the flash kernel's KV-head mapping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, loga_ref, b_ref, c_ref, o_ref, state_scr, *, q: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xc = x_ref[0, 0].astype(jnp.float32)        # (Q, P)  — already dt-scaled
+    lac = loga_ref[0, 0].astype(jnp.float32)    # (Q,)
+    bc = b_ref[0, 0].astype(jnp.float32)        # (Q, N)
+    cc = c_ref[0, 0].astype(jnp.float32)        # (Q, N)
+
+    cum = jnp.cumsum(lac)                       # (Q,)
+    state = state_scr[...]                      # (N, P)
+
+    # inter-chunk: carried state contribution
+    y_inter = jax.lax.dot_general(cc, state, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cum)[:, None]
+
+    # intra-chunk: masked decay-weighted attention-like form
+    scores = jax.lax.dot_general(cc, bc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    dd = cum[:, None] - cum[None, :]
+    t_pos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    s_pos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    m = jnp.where(t_pos >= s_pos, scores * jnp.exp(dd), 0.0)
+    y_intra = jax.lax.dot_general(m, xc, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    o_ref[0, 0] = (y_inter + y_intra).astype(o_ref.dtype)
+
+    # state update
+    total = cum[-1]
+    w = jnp.exp(total - cum)                    # (Q,)
+    state_scr[...] = state * jnp.exp(total) + jax.lax.dot_general(
+        bc * w[:, None], xc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def ssd_pallas(
+    x: jnp.ndarray,        # (B, L, H, P)
+    dt: jnp.ndarray,       # (B, L, H) positive
+    a_neg: jnp.ndarray,    # (H,) negative
+    b_mat: jnp.ndarray,    # (B, L, G, N)
+    c_mat: jnp.ndarray,    # (B, L, G, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    q = min(chunk, l)
+    assert l % q == 0, "pad L to a chunk multiple"
+    nc = l // q
+
+    dtx = (x.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    loga = (dt * a_neg).astype(jnp.float32)     # (B, L, H)
+
+    # head-major layouts
+    xt = dtx.swapaxes(1, 2)                     # (B, H, L, P)
+    lat = loga.swapaxes(1, 2)                   # (B, H, L)
+    bt = b_mat.swapaxes(1, 2)                   # (B, G, L, N)
+    ct = c_mat.swapaxes(1, 2)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, q=q),
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, q), lambda b_, h_, c_: (b_, h_, c_)),
+            pl.BlockSpec((1, 1, q, n),
+                         lambda b_, h_, c_: (b_, h_ // rep, c_, 0)),
+            pl.BlockSpec((1, 1, q, n),
+                         lambda b_, h_, c_: (b_, h_ // rep, c_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, p),
+                               lambda b_, h_, c_: (b_, h_, c_, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, l, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xt, lat, bt, ct)
+    return out.swapaxes(1, 2)

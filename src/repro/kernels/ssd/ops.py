@@ -1,0 +1,24 @@
+"""Public op: SSD chunked scan (Pallas on TPU, chunked-jnp / oracle elsewhere)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.kernels.ssd.ref import ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def ssd(x, dt, a_neg, b_mat, c_mat, *, chunk: int = 256,
+        impl: str = "pallas", interpret: bool = True) -> jnp.ndarray:
+    """Mamba-2 SSD. x: (B,L,H,P), dt: (B,L,H), a_neg: (H,), b/c: (B,L,G,N).
+
+    Returns y (B,L,H,P).  ``impl="ref"`` runs the naive recurrence oracle;
+    the chunked jnp path used by the models lives in repro.models.mamba2.
+    """
+    if impl == "ref":
+        return ssd_ref(x, dt, a_neg, b_mat, c_mat)[0]
+    return ssd_pallas(x, dt, a_neg, b_mat, c_mat, chunk=chunk,
+                      interpret=interpret)

@@ -1,0 +1,41 @@
+"""Oracle: naive per-step SSD recurrence (trivially correct, O(L) steps).
+
+h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) ⊗ B_t
+y_t = C_t · h_t
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, a_neg: jnp.ndarray,
+            b_mat: jnp.ndarray, c_mat: jnp.ndarray,
+            h0: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,L,H,P), dt: (B,L,H), a_neg: (H,) (negative), b/c: (B,L,G,N).
+
+    Returns (y (B,L,H,P), final state (B,H,N,P))."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(b_mat, rep, axis=2).astype(jnp.float32)  # (B,L,H,N)
+    ch = jnp.repeat(c_mat, rep, axis=2).astype(jnp.float32)
+    dtx = (x.astype(jnp.float32) * dt[..., None])
+
+    def step(state, inputs):
+        dtx_t, loga_t, b_t, c_t = inputs
+        decay = jnp.exp(loga_t)[..., None, None]            # (B,H,1,1)
+        state = state * decay + jnp.einsum("bhn,bhp->bhnp", b_t, dtx_t)
+        y = jnp.einsum("bhn,bhnp->bhp", c_t, state)
+        return state, y
+
+    loga = dt * a_neg
+    xs = (dtx.swapaxes(0, 1), loga.swapaxes(0, 1).astype(jnp.float32),
+          bh.swapaxes(0, 1), ch.swapaxes(0, 1))
+    state0 = jnp.zeros((bsz, h, n, p), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), state

@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be executed as its own process (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS line above runs before any jax import so the CPU platform
+exposes 512 placeholder devices for the production meshes:
+
+* single-pod: (16, 16) = 256 chips, axes (data, model)
+* multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model)
+
+For each cell the appropriate step function (train_step / prefill_step /
+decode_step) is jitted with explicit in_shardings, lowered with
+ShapeDtypeStruct inputs (no allocation), compiled, and the compiled
+artifact's memory_analysis / cost_analysis / collective schedule are
+recorded for EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.configs.shapes import SHAPES
+from repro.distributed.sharding import (
+    axis_rules,
+    shardings_like,
+    spec_for,
+)
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.launch.roofline import CellReport, terms_from_hlo
+from repro.models.registry import build_model
+from repro.optim.adamw import AdafactorState, AdamWState
+from repro.training.step import TrainState, make_optimizer, make_prefill_step, make_train_step
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# sharding templates
+# ---------------------------------------------------------------------------
+
+
+def _opt_state_shardings(opt_shapes, params_shapes, param_shardings, mesh):
+    """Derive optimizer-state shardings from the parameter shardings."""
+    repl = NamedSharding(mesh, P())
+
+    if isinstance(opt_shapes, AdamWState):
+        return AdamWState(step=repl, m=param_shardings, v=param_shardings)
+    if isinstance(opt_shapes, AdafactorState):
+        def vr_sh(p_sds, p_sh):
+            if len(p_sds.shape) >= 2:
+                return NamedSharding(mesh, P(*p_sh.spec[:-1]))
+            return p_sh
+
+        def vc_sh(p_sds, p_sh):
+            if len(p_sds.shape) >= 2:
+                return NamedSharding(
+                    mesh, P(*(tuple(p_sh.spec[:-2]) + (p_sh.spec[-1],))))
+            return repl
+
+        vr = jax.tree_util.tree_map(vr_sh, params_shapes, param_shardings)
+        vc = jax.tree_util.tree_map(vc_sh, params_shapes, param_shardings)
+        return AdafactorState(step=repl, vr=vr, vc=vc)
+    raise TypeError(type(opt_shapes))
+
+
+def _batch_shardings(batch_specs, batch_axes, rules, mesh):
+    treedef = jax.tree_util.tree_structure(batch_specs)
+    axes_leaves = treedef.flatten_up_to(batch_axes)
+    return jax.tree_util.tree_unflatten(
+        treedef,
+        [NamedSharding(mesh, spec_for(a or (), rules, mesh))
+         for a in axes_leaves])
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             rule_overrides: Optional[Dict[str, Any]] = None,
+             verbose: bool = True,
+             cfg_overrides: Optional[Dict[str, Any]] = None) -> CellReport:
+    import dataclasses as _dc
+    cell = SHAPES[shape]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    bundle = build_model(cfg)
+    report = CellReport(arch=arch, shape=shape, mesh=mesh_name,
+                        kind=cell.kind, ok=False)
+
+    supported, why = bundle.supports(cell)
+    if not supported:
+        report.note = f"SKIPPED: {why}"
+        report.ok = True
+        return report
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    rules = rules_for(arch, multi_pod=multi_pod,
+                      global_batch=cell.global_batch,
+                      overrides=rule_overrides)
+
+    t0 = time.monotonic()
+    with axis_rules(rules, mesh):
+        params_shapes = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+        param_sh = shardings_like(params_shapes, bundle.specs(), rules, mesh)
+        batch_specs, batch_axes = bundle.input_specs(cell)
+        batch_sh = _batch_shardings(batch_specs, batch_axes, rules, mesh)
+
+        if cell.kind == "train":
+            opt = make_optimizer(cfg)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            opt_sh = _opt_state_shardings(opt_shapes, params_shapes,
+                                          param_sh, mesh)
+            repl = NamedSharding(mesh, P())
+            state_tmpl = TrainState(
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                params=params_shapes, opt_state=opt_shapes)
+            state_sh = TrainState(step=repl, params=param_sh,
+                                  opt_state=opt_sh)
+            train_step, _ = make_train_step(bundle, optimizer=opt)
+            fn = jax.jit(train_step,
+                         in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state_tmpl, batch_specs)
+        elif cell.kind == "prefill":
+            prefill_step = make_prefill_step(bundle, cache_len=cell.seq_len)
+            fn = jax.jit(prefill_step, in_shardings=(param_sh, batch_sh))
+            lowered = fn.lower(params_shapes, batch_specs)
+        else:  # decode
+            cache_shapes = bundle.cache_shapes(cell)
+            cache_sh = shardings_like(cache_shapes, bundle.cache_specs(),
+                                      rules, mesh)
+            fn = jax.jit(bundle.decode_step,
+                         in_shardings=(param_sh, cache_sh, batch_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params_shapes, cache_shapes, batch_specs)
+
+        compiled = lowered.compile()
+    report.compile_s = time.monotonic() - t0
+
+    # ---- memory ---------------------------------------------------------
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        report.arg_bytes = float(getattr(ma, "argument_size_in_bytes", 0))
+        report.out_bytes = float(getattr(ma, "output_size_in_bytes", 0))
+        report.temp_bytes = float(getattr(ma, "temp_size_in_bytes", 0))
+        report.peak_bytes = (report.arg_bytes + report.temp_bytes
+                             + float(getattr(ma, "generated_code_size_in_bytes", 0)))
+
+    # ---- roofline --------------------------------------------------------
+    hlo = compiled.as_text()
+    terms, analysis = terms_from_hlo(hlo, chips)
+    report.flops_dev = terms.flops / chips
+    report.bytes_dev = terms.bytes_hbm / chips
+    report.bytes_dev_min = analysis.bytes_hbm_min
+    report.coll_dev = terms.bytes_collective / chips
+    report.coll_breakdown = {k: v for k, v in
+                             analysis.coll_breakdown.items() if v}
+    report.compute_s = terms.compute_s
+    report.memory_s = terms.memory_s
+    report.collective_s = terms.collective_s
+    report.dominant = terms.dominant
+    report.top_buffers = [f"{b/2**20:.0f}MiB {desc}"
+                          for b, desc in analysis.top_buffers]
+    report.note = " | ".join(
+        [f"TOPDOT {f/1e12:.2f}TF {d[:80]}" for f, d in analysis.top_dots[:4]]
+        + [f"TOPCOLL {b/2**20:.0f}MiB {d[:80]}"
+           for b, d in analysis.top_colls[:4]])
+
+    # ---- MODEL_FLOPS (useful work) ---------------------------------------
+    n_embed = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_body = max(cfg.active_param_count() - n_embed, 1)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        if cfg.family == "encdec":
+            tokens = cell.global_batch * (cell.seq_len
+                                          + cell.seq_len // cfg.dec_ratio)
+        report.model_flops = 6.0 * n_body * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        report.model_flops = 2.0 * n_body * tokens
+    else:
+        report.model_flops = 2.0 * n_body * cell.global_batch
+    total_hlo_flops = max(report.flops_dev * chips, 1.0)
+    report.useful_fraction = report.model_flops / total_hlo_flops
+    report.ok = True
+
+    if verbose:
+        print(f"[dryrun] {arch} x {shape} x {mesh_name}: ok "
+              f"compile={report.compile_s:.1f}s "
+              f"peak/dev={report.peak_bytes/2**30:.2f}GiB "
+              f"dominant={report.dominant}", flush=True)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=ALL_ARCHS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default=None, help="append JSONL report here")
+    ap.add_argument("--rules", default=None,
+                    help="JSON dict of logical->physical rule overrides")
+    ap.add_argument("--config", default=None,
+                    help="JSON dict of ModelConfig field overrides "
+                         "(e.g. '{\"microbatches\": 4}')")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else ALL_ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    overrides = json.loads(args.rules) if args.rules else None
+    cfg_overrides = json.loads(args.config) if args.config else None
+
+    ok = True
+    for arch in archs:
+        for shape in shapes:
+            try:
+                rep = run_cell(arch, shape, args.mesh == "multi", overrides,
+                               cfg_overrides=cfg_overrides)
+            except Exception:  # noqa: BLE001
+                rep = CellReport(arch=arch, shape=shape,
+                                 mesh="2x16x16" if args.mesh == "multi"
+                                 else "16x16",
+                                 kind=SHAPES[shape].kind, ok=False,
+                                 error=traceback.format_exc()[-2000:])
+                print(f"[dryrun] {arch} x {shape} FAILED:\n{rep.error}",
+                      flush=True)
+                ok = False
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rep.to_dict()) + "\n")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+"""Production mesh construction + per-arch sharding-rule overrides.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — required because the
+dry-run must set XLA_FLAGS before jax initializes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from repro.distributed.sharding import Physical, default_rules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# Divisibility-driven deviations from the defaults (DESIGN.md §5):
+# * whisper-tiny / mamba2-780m: vocab (51865 / 50280) is not divisible by the
+#   16-way model axis.  Sharding the embedding's d_model axis instead trips
+#   an XLA SPMD gather bug under the microbatch loop ("Slice dim size 1536
+#   greater than dynamic slice dimension: 96"), so these small tables
+#   (<= 160 MB bf16) are simply replicated.
+ARCH_RULE_OVERRIDES: Dict[str, Dict[str, Physical]] = {
+    "whisper-tiny": {"vocab": None, "embed_unsharded": None},
+    "mamba2-780m": {"vocab": None, "embed_unsharded": None},
+}
+
+
+def rules_for(arch: str, *, multi_pod: bool, global_batch: int,
+              overrides: Optional[Dict[str, Physical]] = None
+              ) -> Dict[str, Physical]:
+    rules = default_rules(multi_pod)
+    rules.update(ARCH_RULE_OVERRIDES.get(arch, {}))
+    if global_batch == 1:
+        rules["batch"] = None   # degenerate long-context cells
+    if overrides:
+        rules.update(overrides)
+    return rules

@@ -1,0 +1,376 @@
+"""Roofline-term extraction from compiled SPMD artifacts.
+
+``compiled.cost_analysis()`` does NOT scale ``while``-loop bodies by their
+trip counts (a ``lax.scan`` over 88 layers is costed as one layer), so this
+module re-derives FLOPs / HBM bytes / collective bytes by walking the
+partitioned HLO text:
+
+* instruction result shapes are recorded per computation, and operand shapes
+  are resolved by name (optimized HLO does not annotate operand types);
+* computations reached through a ``while`` whose backend_config carries
+  ``known_trip_count`` are multiplied by that count (nested loops compose
+  through the call graph);
+* FLOPs: ``dot`` ops — 2 * prod(result) * prod(lhs contracting dims) —
+  counted wherever they appear, including inside fusions;
+* HBM bytes: result + operand bytes of ops at fusion boundaries (fusion
+  internals are register/VMEM-resident).  Computations reached only via
+  ``calls=``/``to_apply=`` (fusion bodies, reduction lambdas) are skipped
+  for bytes; ``while``/``conditional`` bodies are real top-level code and
+  are counted;
+* collective bytes: operand bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (+ ``-start`` forms),
+  trip-scaled.
+
+All quantities are PER DEVICE (the module is the post-SPMD per-device
+program).  Hardware constants (v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI — shared with HALF's NAS objectives (repro.core.hw_model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.hw_model import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    RooflineTerms,
+    roofline,
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(sorted(_DTYPE_BYTES, key=len, reverse=True))
+    + r")\[([0-9,]*)\]")
+_TRIP_RE = re.compile(
+    r'known_trip_count"?\s*[:=]\s*\{\s*"?n"?\s*[:=]\s*"?(\d+)')
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_DOT_LHS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "iota", "partition-id",
+    "replica-id",
+}
+
+
+def _shapes_in(s: str) -> List[Tuple[str, List[int]]]:
+    return [(d, [int(x) for x in dims.split(",") if x])
+            for d, dims in _SHAPE_RE.findall(s)]
+
+
+def _nbytes_many(shapes: List[Tuple[str, List[int]]]) -> int:
+    return sum(_DTYPE_BYTES[d] * math.prod(dims) for d, dims in shapes)
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    flops: float = 0.0
+    bytes_hbm: float = 0.0       # fusion-boundary upper bound (CPU fusions)
+    bytes_hbm_min: float = 0.0   # ideal-fusion lower bound: dot/gather/
+                                 # scatter/slice/collective traffic only
+    bytes_collective: float = 0.0
+    coll_breakdown: Dict[str, float] = dataclasses.field(default_factory=dict)
+    top_buffers: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
+    top_dots: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
+    top_colls: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
+    unresolved_dots: int = 0
+
+
+def _parse_computations(text: str):
+    """-> (dict name -> instruction lines, entry computation name).
+
+    Parameter shapes need no header parsing: optimized HLO re-lists every
+    parameter as a ``%p = TYPE parameter(N)`` instruction, so the defs table
+    resolves them like any other operand.
+    """
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if not line.startswith(" ") and "->" in line and "{" in line:
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                name = m.group(1)
+                comps[name] = []
+                if stripped.startswith("ENTRY"):
+                    entry = name
+                continue
+        if name is not None and stripped not in ("}", "{"):
+            comps[name].append(stripped)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def analyze_hlo(text: str, top_k_buffers: int = 8) -> HloAnalysis:
+    comps, entry = _parse_computations(text)
+
+    # ---- per-computation defs: instr name -> shapes (list for tuples) ----
+    defs: Dict[str, Dict[str, List[Tuple[str, List[int]]]]] = {}
+    # param shapes come from the computation header line's param list — but
+    # headers were not retained; recover parameter shapes from the
+    # "%name = TYPE parameter(N)" instructions that optimized HLO includes.
+    for cname, lines in comps.items():
+        d: Dict[str, List[Tuple[str, List[int]]]] = {}
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            iname, rhs = m.groups()
+            opm = _OP_RE.search(" " + rhs)
+            op_at = opm.start(1) - 1 if opm else len(rhs)
+            d[iname] = _shapes_in(rhs[:op_at])
+        defs[cname] = d
+
+    # ---- call graph -------------------------------------------------------
+    # edge kinds: loop bodies (trip-scaled, top-level) vs fused/applied
+    trip_edges: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    fused_edges: Dict[str, List[str]] = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        for ln in lines:
+            trip = 1
+            tm = _TRIP_RE.search(ln)
+            if tm:
+                trip = int(tm.group(1))
+            for attr, callee in re.findall(
+                    r"(body|condition|true_computation|false_computation|"
+                    r"branch_computations|calls|to_apply)=\(?%?([\w.\-]+)",
+                    ln):
+                if callee not in comps:
+                    continue
+                if attr in ("body", "condition"):
+                    trip_edges[cname].append((callee, trip))
+                elif attr in ("true_computation", "false_computation",
+                              "branch_computations"):
+                    trip_edges[cname].append((callee, 1))
+                else:
+                    fused_edges[cname].append(callee)
+
+    mult: Dict[str, int] = {c: 0 for c in comps}
+    internal: Dict[str, bool] = {c: True for c in comps}
+    if entry:
+        mult[entry] = 1
+        internal[entry] = False
+        frontier = [entry]
+        visited = set(frontier)
+        while frontier:
+            cur = frontier.pop()
+            for callee, trip in trip_edges[cur]:
+                mult[callee] = max(mult[callee], mult[cur] * trip)
+                internal[callee] = internal[callee] and internal[cur]
+                if internal[cur] is False:
+                    internal[callee] = False
+                if callee not in visited:
+                    visited.add(callee)
+                    frontier.append(callee)
+                else:
+                    frontier.append(callee)  # allow multiplier refinement
+                    visited.add(callee)
+                if len(visited) > 10 * len(comps):
+                    break
+            for callee in fused_edges[cur]:
+                mult[callee] = max(mult[callee], mult[cur])
+                # fused: internal regardless of caller
+                if callee not in visited:
+                    visited.add(callee)
+                    frontier.append(callee)
+
+    # simple fixpoint for multipliers (call graphs are small)
+    for _ in range(8):
+        changed = False
+        for cname in comps:
+            for callee, trip in trip_edges[cname]:
+                v = mult[cname] * trip
+                if v > mult[callee]:
+                    mult[callee] = v
+                    changed = True
+                if mult[cname] > 0 and not internal[cname] \
+                        and internal[callee]:
+                    internal[callee] = False
+                    changed = True
+            for callee in fused_edges[cname]:
+                if mult[cname] > mult[callee]:
+                    mult[callee] = mult[cname]
+                    changed = True
+        if not changed:
+            break
+
+    # ---- walk instructions -------------------------------------------------
+    out = HloAnalysis(coll_breakdown={k: 0.0 for k in COLLECTIVES})
+    buffers: List[Tuple[float, str]] = []
+    dots: List[Tuple[float, str]] = []
+    colls: List[Tuple[float, str]] = []
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0)
+        if m <= 0:
+            continue
+        is_internal = internal.get(cname, True)
+        d = defs[cname]
+
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            _, rhs = im.groups()
+            opm = _OP_RE.search(" " + rhs)
+            if not opm:
+                continue
+            op = opm.group(1)
+            op_at = opm.start(1) - 1
+            result_shapes = _shapes_in(rhs[:op_at])
+            # operand list: from the '(' after op name to its match
+            paren = rhs.find("(", op_at)
+            depth, end = 0, len(rhs)
+            for i in range(paren, len(rhs)):
+                if rhs[i] == "(":
+                    depth += 1
+                elif rhs[i] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operand_names = _OPERAND_RE.findall(rhs[paren:end])
+            operand_shapes: List[Tuple[str, List[int]]] = []
+            for on in operand_names:
+                operand_shapes.extend(d.get(on, []))
+
+            # ---- flops -----------------------------------------------
+            if op == "dot":
+                contract = 1
+                dm = _DOT_LHS_RE.search(rhs)
+                lhs = d.get(operand_names[0], []) if operand_names else []
+                if dm and lhs:
+                    lhs_dims = lhs[0][1]
+                    for idx in [int(x) for x in dm.group(1).split(",") if x]:
+                        if idx < len(lhs_dims):
+                            contract *= lhs_dims[idx]
+                else:
+                    out.unresolved_dots += 1
+                f = 2.0 * math.prod(result_shapes[0][1]) * contract * m
+                out.flops += f
+                dots.append((f, f"x{m} {cname}: {ln[:110]}"))
+            elif op == "convolution" and operand_shapes:
+                kernel = operand_shapes[-1][1]
+                out.flops += 2.0 * math.prod(result_shapes[0][1]) \
+                    * math.prod(kernel[:-1] or [1]) * m
+
+            # ---- collectives ----------------------------------------
+            coll = None
+            for c in COLLECTIVES:
+                if op == c or op == c + "-start":
+                    coll = c
+                    break
+            if coll:
+                b = _nbytes_many(operand_shapes) or _nbytes_many(
+                    result_shapes)
+                out.coll_breakdown[coll] += b * m
+                out.bytes_collective += b * m
+                colls.append((b * m, f"x{m} {cname}: {ln[:110]}"))
+
+            # ---- HBM bytes at fusion boundaries ----------------------
+            if not is_internal and op not in _SKIP_BYTES_OPS \
+                    and not op.endswith("-done"):
+                rb = _nbytes_many(result_shapes)
+                ob = _nbytes_many(operand_shapes)
+                if op == "dynamic-update-slice" or (
+                        op == "fusion" and "dynamic-update-slice" in ln):
+                    # in-place slice update: traffic = read + write of the
+                    # UPDATE, not the whole aliased buffer (XLA aliases the
+                    # input buffer; counting the full result per loop
+                    # iteration overstates a scan's residual stacking by
+                    # the trip count).
+                    per_op = [math.prod(dims) * _DTYPE_BYTES[d]
+                              for d, dims in operand_shapes]
+                    big = max(per_op) if per_op else 0
+                    b = 2 * max(ob - big, rb // max(m, 1) if m else rb)
+                elif op == "dynamic-slice" or (
+                        op == "fusion" and "dynamic-slice" in ln):
+                    b = 2 * rb   # read slice + write result
+                else:
+                    b = rb + ob
+                out.bytes_hbm += b * m
+                if b > 0:
+                    buffers.append((b * m, f"x{m} {cname}: {ln[:100]}"))
+                # lower bound: traffic an ideal fusion cannot avoid
+                if (op in ("dot", "convolution", "gather", "scatter",
+                           "dynamic-slice", "dynamic-update-slice", "sort",
+                           "copy") or coll
+                        or (op == "fusion" and any(
+                            t in ln for t in ("dynamic-update-slice",
+                                              "dynamic-slice", "gather",
+                                              "scatter")))):
+                    out.bytes_hbm_min += b * m
+
+    buffers.sort(key=lambda t: -t[0])
+    dots.sort(key=lambda t: -t[0])
+    colls.sort(key=lambda t: -t[0])
+    out.top_buffers = buffers[:top_k_buffers]
+    out.top_dots = dots[:top_k_buffers]
+    out.top_colls = colls[:top_k_buffers]
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
+    a = analyze_hlo(hlo_text)
+    return a.bytes_collective, a.coll_breakdown
+
+
+def terms_from_hlo(hlo_text: str, chips: int) -> Tuple[RooflineTerms,
+                                                       HloAnalysis]:
+    a = analyze_hlo(hlo_text)
+    return roofline(a.flops * chips, a.bytes_hbm * chips,
+                    a.bytes_collective * chips, chips), a
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    ok: bool
+    error: str = ""
+    compile_s: float = 0.0
+    # memory (per device)
+    arg_bytes: float = 0.0
+    out_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    peak_bytes: float = 0.0
+    # roofline (per device per step)
+    flops_dev: float = 0.0
+    bytes_dev: float = 0.0
+    bytes_dev_min: float = 0.0   # ideal-fusion lower bound
+    coll_dev: float = 0.0
+    coll_breakdown: Optional[Dict[str, float]] = None
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0
+    useful_fraction: float = 0.0   # MODEL_FLOPS / (flops_dev * chips)
+    top_buffers: Optional[List[str]] = None
+    note: str = ""
+
+    def to_dict(self):
+        return dataclasses.asdict(self)

@@ -1,0 +1,2 @@
+"""Model zoo substrate: layers, families, and the unified ModelBundle API."""
+from repro.models.registry import build_model  # noqa: F401

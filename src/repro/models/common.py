@@ -1,0 +1,157 @@
+"""Shared building blocks: norms, RoPE (+M-RoPE), init, logical axis specs.
+
+Parameters are plain nested dicts of ``jnp.ndarray``.  For every params tree
+there is a parallel *spec tree* of tuples naming the **logical** axis of each
+dimension (e.g. ``("layers", "embed", "heads")``); the distributed layer maps
+logical names to physical mesh axes (see repro/distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5
+            ) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(kind: str, x: jnp.ndarray, p: Dict[str, jnp.ndarray],
+               eps: float) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["scale"], eps)
+    return layernorm(x, p["scale"], p["bias"], eps)
+
+
+def init_norm(kind: str, d: int) -> Dict[str, jnp.ndarray]:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_specs(kind: str) -> Dict[str, Tuple]:
+    p = {"scale": (None,)}
+    if kind == "layernorm":
+        p["bias"] = (None,)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32. Half-split convention."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, hd); positions: (3, B, S) — temporal/height/width position
+    ids.  The rotary half-dim is split into three sections, each rotated by
+    its own position component (arXiv:2409.12191 §2.1).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, hd)
+    freqs = rope_freqs(hd, theta)                      # (half,)
+    # build per-dimension positions: (B, S, half)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)      # (half,)
+    pos = positions.astype(jnp.float32)                # (3, B, S)
+    pos_per_dim = jnp.take(pos, sec_id, axis=0)        # (half, B, S)
+    angles = jnp.moveaxis(pos_per_dim, 0, -1) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d_model: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embeddings (length, d_model)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / d_model)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], in_axis_size: int,
+               dtype=jnp.float32) -> jnp.ndarray:
+    std = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Tuple[int, ...],
+               dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Sequential PRNG key dispenser — keeps init code flat."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def cast_tree(tree: Any, dtype) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, tree)
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def count_params(tree: Any) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,299 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a STUB).
+
+Per the assignment, ``input_specs()`` provides precomputed frame embeddings
+(post-conv-frontend), so the encoder consumes (B, T_frames, D) directly plus
+sinusoidal positions.  Decoder: causal self-attention (cached at decode) +
+cross-attention to the encoder output (cached once at prefill) + GELU MLP,
+pre-LayerNorm, tied decoder embeddings — matching arXiv:2212.04356 except
+the decoder uses sinusoidal rather than learned positions (documented
+deviation: learned tables would pin parameter shapes to one sequence length,
+breaking the multi-shape dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models.attention import (
+    attention_block,
+    attention_decode,
+    attention_prefill,
+    attention_specs,
+    chunked_attention,
+    cross_attention_block,
+    init_attention,
+    _project_qkv,
+)
+from repro.models.common import (
+    KeyGen,
+    apply_norm,
+    cast_tree,
+    embed_init,
+    init_norm,
+    norm_specs,
+    sinusoidal_positions,
+)
+from repro.models.mlp import init_mlp, mlp_block, mlp_specs
+
+
+# ---------------------------------------------------------------------------
+# Init / specs
+# ---------------------------------------------------------------------------
+
+
+def _init_enc_layer(key, cfg):
+    kg = KeyGen(key)
+    return {
+        "attn_norm": init_norm(cfg.norm, cfg.d_model),
+        "attn": init_attention(kg(), cfg),
+        "mlp_norm": init_norm(cfg.norm, cfg.d_model),
+        "mlp": init_mlp(kg(), cfg),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    kg = KeyGen(key)
+    p = _init_enc_layer(kg(), cfg)
+    p["cross_norm"] = init_norm(cfg.norm, cfg.d_model)
+    p["cross"] = init_attention(kg(), cfg, cross=True)
+    return p
+
+
+def init_encdec(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    kg = KeyGen(key)
+    enc_keys = jax.random.split(kg(), cfg.n_layers)
+    dec_keys = jax.random.split(kg(), cfg.n_dec_layers)
+    params = {
+        "embed": embed_init(kg(), (cfg.vocab_size, cfg.d_model)),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_norm(cfg.norm, cfg.d_model),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": init_norm(cfg.norm, cfg.d_model),
+    }
+    return cast_tree(params, jnp.dtype(cfg.dtype))
+
+
+def encdec_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    as_tuple = lambda s: isinstance(s, tuple)
+    enc = {
+        "attn_norm": norm_specs(cfg.norm),
+        "attn": attention_specs(cfg),
+        "mlp_norm": norm_specs(cfg.norm),
+        "mlp": mlp_specs(cfg),
+    }
+    dec = dict(enc)
+    dec["cross_norm"] = norm_specs(cfg.norm)
+    dec["cross"] = attention_specs(cfg)
+    stack = lambda t: jax.tree_util.tree_map(
+        lambda s: ("layers",) + s, t, is_leaf=as_tuple)
+    return {
+        "embed": ("vocab", "embed_unsharded"),
+        "enc_layers": stack(enc),
+        "enc_norm": norm_specs(cfg.norm),
+        "dec_layers": stack(dec),
+        "final_norm": norm_specs(cfg.norm),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: (B, T, D) stub frontend output -> encoder hidden states."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = logical_constraint(x, "batch", "seq", None)
+
+    def body(x_, lp):
+        h = x_ + attention_block(
+            lp["attn"], apply_norm(cfg.norm, x_, lp["attn_norm"],
+                                   cfg.norm_eps),
+            cfg, causal=False, use_rope=False)
+        h = h + mlp_block(
+            lp["mlp"], apply_norm(cfg.norm, h, lp["mlp_norm"], cfg.norm_eps),
+            cfg)
+        return logical_constraint(h, "batch", "seq", None), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return apply_norm(cfg.norm, x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_positions(length: int, cfg: ModelConfig) -> jnp.ndarray:
+    return sinusoidal_positions(length, cfg.d_model)
+
+
+def decode_train(params, dec_tokens: jnp.ndarray, enc_out: jnp.ndarray,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    """Teacher-forced decoder forward. Returns logits (B, S_dec, V)."""
+    x = jnp.take(params["embed"], dec_tokens, axis=0).astype(
+        jnp.dtype(cfg.dtype))
+    x = x + _dec_positions(x.shape[1], cfg).astype(x.dtype)
+    x = logical_constraint(x, "batch", "seq", None)
+
+    def body(x_, lp):
+        h = x_ + attention_block(
+            lp["attn"], apply_norm(cfg.norm, x_, lp["attn_norm"],
+                                   cfg.norm_eps),
+            cfg, causal=True, use_rope=False)
+        h = h + cross_attention_block(
+            lp["cross"], apply_norm(cfg.norm, h, lp["cross_norm"],
+                                    cfg.norm_eps), enc_out, cfg)
+        h = h + mlp_block(
+            lp["mlp"], apply_norm(cfg.norm, h, lp["mlp_norm"], cfg.norm_eps),
+            cfg)
+        return logical_constraint(h, "batch", "seq", None), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    return encdec_unembed(params, x, cfg)
+
+
+def encdec_unembed(params, x, cfg: ModelConfig) -> jnp.ndarray:
+    logits = x @ params["embed"].T.astype(x.dtype)   # tied
+    return logical_constraint(logits, "batch", "seq", "vocab")
+
+
+def encdec_hidden(params, cfg: ModelConfig, *, frames, dec_tokens
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decoder final hidden states (pre-unembed) for the chunked loss."""
+    enc_out = encode(params, frames, cfg)
+    x = jnp.take(params["embed"], dec_tokens, axis=0).astype(
+        jnp.dtype(cfg.dtype))
+    x = x + _dec_positions(x.shape[1], cfg).astype(x.dtype)
+    x = logical_constraint(x, "batch", "seq", None)
+
+    def body(x_, lp):
+        h = x_ + attention_block(
+            lp["attn"], apply_norm(cfg.norm, x_, lp["attn_norm"],
+                                   cfg.norm_eps),
+            cfg, causal=True, use_rope=False)
+        h = h + cross_attention_block(
+            lp["cross"], apply_norm(cfg.norm, h, lp["cross_norm"],
+                                    cfg.norm_eps), enc_out, cfg)
+        h = h + mlp_block(
+            lp["mlp"], apply_norm(cfg.norm, h, lp["mlp_norm"], cfg.norm_eps),
+            cfg)
+        return logical_constraint(h, "batch", "seq", None), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def encdec_forward(params, cfg: ModelConfig, *, frames, dec_tokens
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    enc_out = encode(params, frames, cfg)
+    logits = decode_train(params, dec_tokens, enc_out, cfg)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def encdec_prefill(params, cfg: ModelConfig, *, frames, dec_tokens,
+                   cache_len: int):
+    """Encode audio + teacher-force the decoder prompt; build caches."""
+    enc_out = encode(params, frames, cfg)
+    x = jnp.take(params["embed"], dec_tokens, axis=0).astype(
+        jnp.dtype(cfg.dtype))
+    s = dec_tokens.shape[1]
+    x = x + _dec_positions(s, cfg).astype(x.dtype)
+
+    def body(x_, lp):
+        h = apply_norm(cfg.norm, x_, lp["attn_norm"], cfg.norm_eps)
+        a, (kc, vc) = attention_prefill(lp["attn"], h, cfg, cache_len,
+                                        use_rope=False)
+        h = x_ + a
+        # cross attention + its cache (computed once from enc_out)
+        hn = apply_norm(cfg.norm, h, lp["cross_norm"], cfg.norm_eps)
+        q, ck, cv = _project_qkv(lp["cross"], hn, cfg, kv_src=enc_out)
+        attn = chunked_attention(q, ck, cv, causal=False,
+                                 chunk=cfg.attn_chunk)
+        h = h + attn.reshape(h.shape[0], s, -1) \
+            @ lp["cross"]["o"].astype(h.dtype)
+        h = h + mlp_block(
+            lp["mlp"], apply_norm(cfg.norm, h, lp["mlp_norm"], cfg.norm_eps),
+            cfg)
+        return h, (kc, vc, ck, cv)
+
+    x, (k_all, v_all, ck_all, cv_all) = jax.lax.scan(body, x,
+                                                     params["dec_layers"])
+    x = apply_norm(cfg.norm, x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T.astype(x.dtype))[:, 0]
+    cache = {"k": k_all, "v": v_all, "ck": ck_all, "cv": cv_all,
+             "len": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      enc_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((cfg.n_dec_layers, batch, cache_len, kvh, hd), dt),
+        "v": jnp.zeros((cfg.n_dec_layers, batch, cache_len, kvh, hd), dt),
+        "ck": jnp.zeros((cfg.n_dec_layers, batch, enc_len, kvh, hd), dt),
+        "cv": jnp.zeros((cfg.n_dec_layers, batch, enc_len, kvh, hd), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def encdec_cache_specs(cfg: ModelConfig):
+    kv = ("layers", "batch", None, "kv_heads", "head_dim")
+    return {"k": kv, "v": kv, "ck": kv, "cv": kv, "len": ()}
+
+
+def encdec_decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One decoder token; cross caches are static."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    pos = cache["len"]
+    # position embedding for the current step: row `pos` of the sinusoid —
+    # computed directly to stay shape-static.
+    d = cfg.d_model
+    half_dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    inv = jnp.exp(-jnp.log(10000.0) * half_dim / d)
+    ang = pos.astype(jnp.float32) * inv
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+    x = x + pe.astype(x.dtype)
+
+    def body(x_, layer):
+        lp, kc, vc, ck, cv = layer
+        h = apply_norm(cfg.norm, x_, lp["attn_norm"], cfg.norm_eps)
+        a, kc, vc = attention_decode(lp["attn"], h, kc, vc, pos, cfg,
+                                     use_rope=False)
+        h = x_ + a
+        hn = apply_norm(cfg.norm, h, lp["cross_norm"], cfg.norm_eps)
+        q, _, _ = _project_qkv(lp["cross"], hn, cfg)  # q only; KV cached
+        attn = chunked_attention(q, ck, cv, causal=False,
+                                 chunk=cfg.attn_chunk)
+        h = h + attn.reshape(h.shape[0], 1, -1) \
+            @ lp["cross"]["o"].astype(h.dtype)
+        h = h + mlp_block(
+            lp["mlp"], apply_norm(cfg.norm, h, lp["mlp_norm"], cfg.norm_eps),
+            cfg)
+        return h, (kc, vc)
+
+    x, (k_all, v_all) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"]))
+    x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T.astype(x.dtype))[:, 0]
+    new_cache = {"k": k_all, "v": v_all, "ck": cache["ck"],
+                 "cv": cache["cv"], "len": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,332 @@
+"""Zamba2-style hybrid backbone: Mamba-2 layers + a SHARED attention block.
+
+Structure (arXiv:2411.15242, simplified — see DESIGN.md §4): ``n_layers``
+Mamba-2 blocks; after every ``attn_period`` of them, one *shared*
+transformer block (attention + MLP, a single parameter set reused at every
+application) is applied.  Weight sharing is respected everywhere: the shared
+block's params are stored once, its KV caches are per-application
+(stacked on a leading ``groups`` axis).
+
+Simplifications vs. the released checkpoints (documented): no per-application
+LoRA deltas on the shared block, and the shared block consumes the current
+hidden state rather than concat(hidden, embedding).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models.attention import (
+    attention_block,
+    attention_decode,
+    attention_prefill,
+    attention_specs,
+    init_attention,
+)
+from repro.models.common import (
+    KeyGen,
+    apply_norm,
+    cast_tree,
+    embed_init,
+    init_norm,
+    norm_specs,
+)
+from repro.models.mamba2 import (
+    init_mamba2,
+    mamba2_block,
+    mamba2_decode,
+    mamba2_specs,
+)
+from repro.models.mlp import init_mlp, mlp_block, mlp_specs
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, group_size, n_tail) — groups end with a shared-block app."""
+    period = cfg.attn_period or cfg.n_layers + 1
+    n_groups = cfg.n_layers // period
+    tail = cfg.n_layers - n_groups * period
+    return n_groups, period, tail
+
+
+# ---------------------------------------------------------------------------
+# Init / specs
+# ---------------------------------------------------------------------------
+
+
+def _init_mamba_layer(key, cfg):
+    kg = KeyGen(key)
+    return {"norm": init_norm(cfg.norm, cfg.d_model),
+            "mamba": init_mamba2(kg(), cfg)}
+
+
+def init_hybrid(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    kg = KeyGen(key)
+    n_groups, period, tail = _layout(cfg)
+    init_one = lambda k: _init_mamba_layer(k, cfg)
+
+    params: Dict[str, Any] = {
+        "embed": embed_init(kg(), (cfg.vocab_size, cfg.d_model)),
+        "final_norm": init_norm(cfg.norm, cfg.d_model),
+        "unembed": embed_init(kg(), (cfg.d_model, cfg.vocab_size)),
+    }
+    if n_groups:  # pure-SSM configs (attn_period=0) have no shared block
+        group_keys = jax.random.split(kg(), n_groups * period)
+        groups = jax.vmap(init_one)(group_keys)
+        params["groups"] = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_groups, period) + x.shape[1:]), groups)
+        params["shared"] = {
+            "attn_norm": init_norm(cfg.norm, cfg.d_model),
+            "attn": init_attention(kg(), cfg),
+            "mlp_norm": init_norm(cfg.norm, cfg.d_model),
+            "mlp": init_mlp(kg(), cfg),
+        }
+    if tail:
+        tail_keys = jax.random.split(kg(), tail)
+        params["tail"] = jax.vmap(init_one)(tail_keys)
+    return cast_tree(params, jnp.dtype(cfg.dtype))
+
+
+def hybrid_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    n_groups, period, tail = _layout(cfg)
+    lp = {"norm": norm_specs(cfg.norm), "mamba": mamba2_specs(cfg)}
+    as_tuple = lambda s: isinstance(s, tuple)
+    specs: Dict[str, Any] = {
+        "embed": ("vocab", "embed_unsharded"),
+        "final_norm": norm_specs(cfg.norm),
+        "unembed": ("embed_unsharded", "vocab"),
+    }
+    if n_groups:
+        specs["groups"] = jax.tree_util.tree_map(
+            lambda s: ("layer_groups", "layers") + s, lp, is_leaf=as_tuple)
+        specs["shared"] = {
+            "attn_norm": norm_specs(cfg.norm),
+            "attn": attention_specs(cfg),
+            "mlp_norm": norm_specs(cfg.norm),
+            "mlp": mlp_specs(cfg),
+        }
+    if tail:
+        specs["tail"] = jax.tree_util.tree_map(
+            lambda s: ("layers",) + s, lp, is_leaf=as_tuple)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (training)
+# ---------------------------------------------------------------------------
+
+
+def _mamba_layer_fwd(lp, x, cfg):
+    return x + mamba2_block(
+        lp["mamba"], apply_norm(cfg.norm, x, lp["norm"], cfg.norm_eps), cfg)
+
+
+def _shared_block_fwd(sp, x, cfg, positions=None):
+    h = x + attention_block(
+        sp["attn"], apply_norm(cfg.norm, x, sp["attn_norm"], cfg.norm_eps),
+        cfg, positions=positions, causal=True)
+    return h + mlp_block(
+        sp["mlp"], apply_norm(cfg.norm, h, sp["mlp_norm"], cfg.norm_eps), cfg)
+
+
+def hybrid_unembed(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    logits = x @ params["unembed"].astype(x.dtype)
+    return logical_constraint(logits, "batch", "seq", "vocab")
+
+
+def hybrid_hidden(params: Dict[str, Any], cfg: ModelConfig,
+                  *, tokens: jnp.ndarray,
+                  positions: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = logical_constraint(x, "batch", "seq", None)
+
+    def inner(x_, lp):
+        out = _mamba_layer_fwd(lp, x_, cfg)
+        return logical_constraint(out, "batch", "seq", None), None
+
+    if "groups" in params:
+        shared = params["shared"]
+
+        def outer(x_, gp):
+            x_, _ = jax.lax.scan(lambda c, lp: inner(c, lp), x_, gp)
+            x_ = _shared_block_fwd(shared, x_, cfg, positions)
+            return logical_constraint(x_, "batch", "seq", None), None
+
+        body = jax.checkpoint(lambda c, gp: outer(c, gp)) \
+            if cfg.remat != "none" else outer
+        x, _ = jax.lax.scan(body, x, params["groups"])
+    if "tail" in params:
+        tail_body = jax.checkpoint(inner) if cfg.remat != "none" else inner
+        x, _ = jax.lax.scan(tail_body, x, params["tail"])
+    x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def hybrid_forward(params: Dict[str, Any], cfg: ModelConfig,
+                   *, tokens: jnp.ndarray,
+                   positions: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x, aux = hybrid_hidden(params, cfg, tokens=tokens, positions=positions)
+    return hybrid_unembed(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    n_groups, period, tail = _layout(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    kv = (n_groups, batch, cache_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+    cache = {
+        "conv_tail": jnp.zeros((tail, batch, cfg.conv_kernel - 1, conv_ch),
+                               dt),
+        "ssm_tail": jnp.zeros((tail, batch, cfg.ssm_heads, cfg.ssm_state,
+                               cfg.ssm_head_dim), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if n_groups:
+        cache.update({
+            "conv": jnp.zeros((n_groups, period, batch, cfg.conv_kernel - 1,
+                               conv_ch), dt),
+            "ssm": jnp.zeros((n_groups, period, batch, cfg.ssm_heads,
+                              cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+            "k": jnp.zeros(kv, dt),
+            "v": jnp.zeros(kv, dt),
+        })
+    return cache
+
+
+def hybrid_cache_specs(cfg: ModelConfig):
+    n_groups, _, _ = _layout(cfg)
+    specs = {
+        "conv_tail": ("layers", "batch", None, "heads"),
+        "ssm_tail": ("layers", "batch", "heads", None, None),
+        "len": (),
+    }
+    if n_groups:
+        specs.update({
+            "conv": ("layer_groups", "layers", "batch", None, "heads"),
+            "ssm": ("layer_groups", "layers", "batch", "heads", None, None),
+            "k": ("layer_groups", "batch", None, "kv_heads", "head_dim"),
+            "v": ("layer_groups", "batch", None, "kv_heads", "head_dim"),
+        })
+    return specs
+
+
+def hybrid_decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One decode token through the full hybrid stack."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    pos = cache["len"]
+
+    def mamba_step(x_, layer):
+        lp, conv_s, ssm_s = layer
+        h = apply_norm(cfg.norm, x_, lp["norm"], cfg.norm_eps)
+        y, conv_s, ssm_s = mamba2_decode(lp["mamba"], h, conv_s, ssm_s, cfg)
+        return x_ + y, (conv_s, ssm_s)
+
+    new_cache = {"len": pos + 1}
+    if "groups" in params:
+        shared = params["shared"]
+
+        def group_step(x_, layer):
+            gp, conv_s, ssm_s, kc, vc = layer
+            x_, (conv_new, ssm_new) = jax.lax.scan(
+                mamba_step, x_, (gp, conv_s, ssm_s))
+            h = apply_norm(cfg.norm, x_, shared["attn_norm"], cfg.norm_eps)
+            a, kc, vc = attention_decode(shared["attn"], h, kc, vc, pos, cfg)
+            x_ = x_ + a
+            x_ = x_ + mlp_block(shared["mlp"],
+                                apply_norm(cfg.norm, x_, shared["mlp_norm"],
+                                           cfg.norm_eps), cfg)
+            return x_, (conv_new, ssm_new, kc, vc)
+
+        x, (conv_g, ssm_g, k_all, v_all) = jax.lax.scan(
+            group_step, x,
+            (params["groups"], cache["conv"], cache["ssm"],
+             cache["k"], cache["v"]))
+        new_cache.update({"conv": conv_g, "ssm": ssm_g,
+                          "k": k_all, "v": v_all})
+    conv_t, ssm_t = cache["conv_tail"], cache["ssm_tail"]
+    if "tail" in params:
+        x, (conv_t, ssm_t) = jax.lax.scan(
+            mamba_step, x, (params["tail"], conv_t, ssm_t))
+    x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["unembed"].astype(x.dtype))[:, 0]
+    new_cache.update({"conv_tail": conv_t, "ssm_tail": ssm_t})
+    return logits, new_cache
+
+
+def hybrid_prefill(params, cfg: ModelConfig, *, tokens, cache_len: int):
+    """Prefill: run the full-sequence forward while building every cache.
+
+    SSM states after a full sequence come from re-running the chunked scan
+    and keeping the final state; conv states keep the last K-1 inputs; the
+    shared block's KV caches are collected per application.
+    """
+    from repro.models.mamba2 import _causal_conv, _split_proj, ssd_chunked
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    b, s = tokens.shape
+    di, g, n, h = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads)
+
+    def mamba_with_state(lp, x_):
+        hin = apply_norm(cfg.norm, x_, lp["norm"], cfg.norm_eps)
+        p = lp["mamba"]
+        zxbcdt = hin @ p["in_proj"].astype(hin.dtype)
+        z, xbc, dt = _split_proj(zxbcdt, cfg)
+        conv_state = xbc[:, -(cfg.conv_kernel - 1):]
+        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(hin.dtype),
+                                       p["conv_b"].astype(hin.dtype)))
+        xs = xbc[..., :di].reshape(b, s, h, cfg.ssm_head_dim)
+        b_mat = xbc[..., di: di + g * n].reshape(b, s, g, n)
+        c_mat = xbc[..., di + g * n:].reshape(b, s, g, n)
+        dt_full = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        a_neg = -jnp.exp(p["A_log"])
+        y, ssm_state = ssd_chunked(xs, dt_full, a_neg, b_mat, c_mat,
+                                   cfg.ssm_chunk)
+        y = y + xs * p["D"][None, None, :, None].astype(hin.dtype)
+        y = y.reshape(b, s, di) * jax.nn.silu(z)
+        var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+             * p["norm_scale"]).astype(hin.dtype)
+        return x_ + y @ p["out_proj"].astype(hin.dtype), conv_state, ssm_state
+
+    def inner(x_, lp):
+        out, conv_s, ssm_s = mamba_with_state(lp, x_)
+        return out, (conv_s, ssm_s)
+
+    cache = {"len": jnp.asarray(s, jnp.int32)}
+    if "groups" in params:
+        shared = params["shared"]
+
+        def outer(x_, gp):
+            x_, states = jax.lax.scan(inner, x_, gp)
+            hn = apply_norm(cfg.norm, x_, shared["attn_norm"], cfg.norm_eps)
+            a, (kc, vc) = attention_prefill(shared["attn"], hn, cfg,
+                                            cache_len)
+            x_ = x_ + a
+            x_ = x_ + mlp_block(shared["mlp"],
+                                apply_norm(cfg.norm, x_, shared["mlp_norm"],
+                                           cfg.norm_eps), cfg)
+            return x_, states + (kc, vc)
+
+        x, (conv_g, ssm_g, k_all, v_all) = jax.lax.scan(outer, x,
+                                                        params["groups"])
+        cache.update({"conv": conv_g, "ssm": ssm_g, "k": k_all, "v": v_all})
+    n_groups, period, tail = _layout(cfg)
+    conv_ch = di + 2 * g * n
+    conv_t = jnp.zeros((tail, b, cfg.conv_kernel - 1, conv_ch), x.dtype)
+    ssm_t = jnp.zeros((tail, b, h, n, cfg.ssm_head_dim), jnp.float32)
+    if "tail" in params:
+        x, (conv_t, ssm_t) = jax.lax.scan(inner, x, params["tail"])
+    x = apply_norm(cfg.norm, x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["unembed"].astype(x.dtype))[:, 0]
+    cache.update({"conv_tail": conv_t, "ssm_tail": ssm_t})
+    return logits, cache

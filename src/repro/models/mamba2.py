@@ -1,0 +1,239 @@
+"""Mamba-2 block — SSD (state-space duality) with chunked scan
+(arXiv:2405.21060).
+
+Forward = in_proj → causal depthwise conv (x/B/C path) → SSD → gated RMSNorm
+→ out_proj.  The SSD core runs one ``lax.scan`` over length-``Q`` chunks:
+the intra-chunk part is the quadratic "attention-like" form, the inter-chunk
+part carries the (B, H, N, P) state recurrence — O(L·Q) work, O(L) memory.
+``repro/kernels/ssd`` implements the same chunk body as a Pallas kernel;
+``repro/kernels/ssd/ref.py`` holds the naive per-step recurrence oracle both
+are validated against.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    kg = KeyGen(key)
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * g * n
+    d_in_proj = 2 * di + 2 * g * n + h
+    # dt bias: inverse softplus of dt ~ U[1e-3, 0.1]
+    u = jax.random.uniform(kg(), (h,), jnp.float32)
+    dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(kg(), (d, d_in_proj), d),
+        "conv_w": (jax.random.uniform(kg(), (cfg.conv_kernel, conv_ch),
+                                      jnp.float32) - 0.5)
+        * (2.0 / math.sqrt(cfg.conv_kernel * conv_ch)),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jax.random.uniform(kg(), (h,), jnp.float32,
+                                            1.0, 16.0)),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(kg(), (di, d), di),
+    }
+
+
+def mamba2_specs(cfg: ModelConfig, prefix: Tuple = ()) -> Dict[str, Tuple]:
+    return {
+        "in_proj": prefix + ("embed", "heads"),
+        "conv_w": prefix + (None, "heads"),
+        "conv_b": prefix + ("heads",),
+        "dt_bias": prefix + ("heads",),
+        "A_log": prefix + ("heads",),
+        "D": prefix + ("heads",),
+        "norm_scale": prefix + ("heads",),
+        "out_proj": prefix + ("heads", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: jnp.ndarray,        # (B, L, H, P) — inputs per head
+    dt: jnp.ndarray,       # (B, L, H)    — positive step sizes
+    a_neg: jnp.ndarray,    # (H,)         — A = -exp(A_log), negative
+    b_mat: jnp.ndarray,    # (B, L, G, N)
+    c_mat: jnp.ndarray,    # (B, L, G, N)
+    chunk: int,
+    h0: jnp.ndarray | None = None,  # (B, H, N, P) initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,L,H,P), final_state (B,H,N,P))."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    q = min(chunk, l)
+    nc = -(-l // q)
+    pad = nc * q - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # expand groups to heads
+    bh = jnp.repeat(b_mat, rep, axis=2)    # (B, L', H, N)
+    ch = jnp.repeat(c_mat, rep, axis=2)
+
+    loga = dt * a_neg                      # (B, L', H) per-step log decay
+    dtx = (x * dt[..., None]).astype(jnp.float32)
+
+    def to_chunks(t):
+        return t.reshape((bsz, nc) + (q,) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(dtx), to_chunks(loga.astype(jnp.float32)),
+          to_chunks(bh.astype(jnp.float32)), to_chunks(ch.astype(jnp.float32)))
+
+    state0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def body(state, inp):
+        xc, lac, bc, cc = inp              # (B,Q,H,P), (B,Q,H), (B,Q,H,N) x2
+        cum = jnp.cumsum(lac, axis=1)      # inclusive cumulative log decay
+        # --- inter-chunk: contribution of the carried state -------------
+        # y_inter[t] = exp(cum[t]) * C_t · state
+        y_inter = jnp.einsum("bqhn,bhnp->bqhp", cc, state) \
+            * jnp.exp(cum)[..., None]
+        # --- intra-chunk (attention-like) --------------------------------
+        # m[t,s] = (C_t·B_s) * exp(cum[t] - cum[s]) for s <= t
+        scores = jnp.einsum("bqhn,bshn->bqsh", cc, bc)
+        dd = cum[:, :, None, :] - cum[:, None, :, :]        # (B,Q,S,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        m = jnp.where(mask[None, :, :, None], scores * jnp.exp(dd), 0.0)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", m, xc)
+        # --- state update -------------------------------------------------
+        # state' = exp(total) * state + sum_s exp(total - cum[s]) B_s ⊗ x_s
+        total = cum[:, -1, :]                                # (B,H)
+        w = jnp.exp(total[:, None, :] - cum)                 # (B,Q,H)
+        state_new = state * jnp.exp(total)[..., None, None] \
+            + jnp.einsum("bqhn,bqhp,bqh->bhnp", bc, xc, w)
+        return state_new, y_inter + y_intra
+
+    state, ys = jax.lax.scan(body, state0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, nc * q, h, p)[:, :l]
+    return y.astype(x.dtype), state
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,        # (B, 1, H, P)
+    dt: jnp.ndarray,       # (B, 1, H)
+    a_neg: jnp.ndarray,    # (H,)
+    b_mat: jnp.ndarray,    # (B, 1, G, N)
+    c_mat: jnp.ndarray,    # (B, 1, G, N)
+    state: jnp.ndarray,    # (B, H, N, P)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrence for one token: h' = e^{dt·A} h + dt·B⊗x; y = C·h'."""
+    g = b_mat.shape[2]
+    rep = x.shape[2] // g
+    bh = jnp.repeat(b_mat[:, 0], rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    ch = jnp.repeat(c_mat[:, 0], rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt[:, 0] * a_neg)[..., None, None]             # (B,H,1,1)
+    dtx = (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)        # (B,H,P)
+    state_new = state * decay + jnp.einsum("bhn,bhp->bhnp", bh, dtx)
+    y = jnp.einsum("bhn,bhnp->bhp", ch, state_new)
+    return y[:, None].astype(x.dtype), state_new
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, L, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for i in range(k):
+        acc = acc + jax.lax.slice_in_dim(xp, i, i + x.shape[1], 1, 1) * w[i]
+    return acc + b
+
+
+def _split_proj(zxbcdt: jnp.ndarray, cfg: ModelConfig):
+    di, g, n, h = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: di + di + 2 * g * n]
+    dt = zxbcdt[..., di + di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def mamba2_block(p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig
+                 ) -> jnp.ndarray:
+    """Full-sequence forward. x: (B, L, D) -> (B, L, D)."""
+    bsz, l, _ = x.shape
+    di, g, n, h = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype)))
+    xs = xbc[..., :di].reshape(bsz, l, h, cfg.ssm_head_dim)
+    b_mat = xbc[..., di: di + g * n].reshape(bsz, l, g, n)
+    c_mat = xbc[..., di + g * n:].reshape(bsz, l, g, n)
+    dt_full = jax.nn.softplus(dt.astype(jnp.float32)
+                              + p["dt_bias"])               # (B,L,H)
+    a_neg = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(xs, dt_full, a_neg, b_mat, c_mat, cfg.ssm_chunk)
+    y = y + xs * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, l, di)
+    # gated RMSNorm (mamba2: norm(y * silu(z)))
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm_scale"]).astype(x.dtype)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba2_decode(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,             # (B, 1, D)
+    conv_state: jnp.ndarray,    # (B, K-1, conv_ch)
+    ssm_state: jnp.ndarray,     # (B, H, N, P)
+    cfg: ModelConfig,
+):
+    """One decode step. Returns (y, conv_state, ssm_state)."""
+    bsz = x.shape[0]
+    di, g, n, h = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    # rolling conv buffer: window = [conv_state ; xbc]
+    win = jnp.concatenate([conv_state, xbc], axis=1)        # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", win,
+                          p["conv_w"].astype(x.dtype)) \
+        + p["conv_b"].astype(x.dtype)
+    xbc_t = jax.nn.silu(conv_out)[:, None]                  # (B, 1, C)
+    conv_state = win[:, 1:]
+    xs = xbc_t[..., :di].reshape(bsz, 1, h, cfg.ssm_head_dim)
+    b_mat = xbc_t[..., di: di + g * n].reshape(bsz, 1, g, n)
+    c_mat = xbc_t[..., di + g * n:].reshape(bsz, 1, g, n)
+    dt_full = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["A_log"])
+    y, ssm_state = ssd_decode_step(xs, dt_full, a_neg, b_mat, c_mat,
+                                   ssm_state)
+    y = y + xs * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, 1, di)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm_scale"]).astype(x.dtype)
+    return y @ p["out_proj"].astype(x.dtype), conv_state, ssm_state

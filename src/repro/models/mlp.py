@@ -1,0 +1,54 @@
+"""Feed-forward blocks: SwiGLU (llama-style) and GELU (whisper-style)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, dense_init
+
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int = 0
+             ) -> Dict[str, jnp.ndarray]:
+    kg = KeyGen(key)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "gate": dense_init(kg(), (d, f), d),
+            "up": dense_init(kg(), (d, f), d),
+            "down": dense_init(kg(), (f, d), f),
+        }
+    return {
+        "up": dense_init(kg(), (d, f), d),
+        "up_b": jnp.zeros((f,), jnp.float32),
+        "down": dense_init(kg(), (f, d), f),
+        "down_b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def mlp_specs(cfg: ModelConfig, prefix: Tuple = ()) -> Dict[str, Tuple]:
+    if cfg.act == "swiglu":
+        return {
+            "gate": prefix + ("embed", "mlp"),
+            "up": prefix + ("embed", "mlp"),
+            "down": prefix + ("mlp", "embed"),
+        }
+    return {
+        "up": prefix + ("embed", "mlp"),
+        "up_b": prefix + ("mlp",),
+        "down": prefix + ("mlp", "embed"),
+        "down_b": prefix + (None,),
+    }
+
+
+def mlp_block(p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig
+              ) -> jnp.ndarray:
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["gate"].astype(x.dtype)) \
+            * (x @ p["up"].astype(x.dtype))
+        return h @ p["down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["up"].astype(x.dtype)
+                    + p["up_b"].astype(x.dtype), approximate=True)
+    return h @ p["down"].astype(x.dtype) + p["down_b"].astype(x.dtype)

@@ -1,0 +1,203 @@
+"""ModelBundle: one functional API over every architecture family.
+
+The launcher, trainer, server, dry-run and tests all consume this interface;
+family dispatch happens once, here.
+
+* ``apply_train(params, batch) -> (logits, aux)`` — full teacher-forced pass
+* ``prefill(params, batch) -> (last_logits, cache)``
+* ``decode_step(params, cache, batch) -> (logits, cache)``
+* ``input_specs(cell) -> (tree of ShapeDtypeStruct, tree of logical axes)``
+* ``cache_shapes(cell) -> tree of ShapeDtypeStruct`` (dry-run, no alloc)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ENCDEC_DECODE_ENC_LEN, ShapeCell
+from repro.models import encdec as M_encdec
+from repro.models import hybrid as M_hybrid
+from repro.models import transformer as M_lm
+
+I32 = jnp.int32
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    specs: Callable[[], Any]
+    apply_train: Callable[[Any, Dict[str, Any]], Tuple[jnp.ndarray, jnp.ndarray]]
+    prefill: Callable[[Any, Dict[str, Any]], Tuple[jnp.ndarray, Any]]
+    decode_step: Callable[[Any, Any, Dict[str, Any]], Tuple[jnp.ndarray, Any]]
+    make_cache: Callable[[int, int], Any]
+    cache_specs: Callable[[], Any]
+    # chunked-loss path (§Perf C2'): backbone hidden states + per-chunk
+    # unembed, so (B, S, V) logits never fully materialize in training.
+    apply_hidden: Optional[Callable[[Any, Dict[str, Any]],
+                                    Tuple[jnp.ndarray, jnp.ndarray]]] = None
+    unembed_chunk: Optional[Callable[[Any, jnp.ndarray], jnp.ndarray]] = None
+
+    # ------------------------------------------------------------ dry-run io
+    def input_specs(self, cell: ShapeCell) -> Tuple[Dict[str, Any],
+                                                    Dict[str, Any]]:
+        cfg = self.cfg
+        b, s = cell.global_batch, cell.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        tok = lambda shape: jax.ShapeDtypeStruct(shape, I32)
+        emb = lambda shape: jax.ShapeDtypeStruct(shape, dt)
+
+        if cell.kind == "decode":
+            specs = {"tokens": tok((b, 1))}
+            axes = {"tokens": ("batch", None)}
+            return specs, axes
+
+        if cfg.family == "vlm":
+            specs = {"embeds": emb((b, s, cfg.d_model)),
+                     "positions": tok((3, b, s))}
+            axes = {"embeds": ("batch", "seq", None),
+                    "positions": (None, "batch", "seq")}
+        elif cfg.family == "encdec":
+            sd = max(s // cfg.dec_ratio, 8)
+            specs = {"frames": emb((b, s, cfg.d_model)),
+                     "dec_tokens": tok((b, sd))}
+            axes = {"frames": ("batch", "seq", None),
+                    "dec_tokens": ("batch", "seq")}
+        else:
+            specs = {"tokens": tok((b, s))}
+            axes = {"tokens": ("batch", "seq")}
+
+        if cell.kind == "train":
+            if cfg.family == "encdec":
+                sd = max(s // cfg.dec_ratio, 8)
+                specs["labels"] = tok((b, sd))
+            else:
+                specs["labels"] = tok((b, s))
+            axes["labels"] = ("batch", "seq")
+        return specs, axes
+
+    def cache_shapes(self, cell: ShapeCell) -> Any:
+        """ShapeDtypeStructs of the decode cache (no allocation)."""
+        return jax.eval_shape(
+            lambda: self.make_cache(cell.global_batch, cell.seq_len))
+
+    def supports(self, cell: ShapeCell) -> Tuple[bool, str]:
+        """Assignment skip rules (DESIGN.md §4)."""
+        if cell.name == "long_500k" and not self.cfg.sub_quadratic:
+            return False, ("full-attention arch: 500k-token KV decode is the "
+                           "quadratic regime the assignment excludes")
+        return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Family adapters
+# ---------------------------------------------------------------------------
+
+
+def _lm_bundle(cfg: ModelConfig) -> ModelBundle:
+    def apply_train(params, batch):
+        return M_lm.lm_forward(params, cfg, tokens=batch.get("tokens"),
+                               embeds=batch.get("embeds"),
+                               positions=batch.get("positions"))
+
+    def prefill(params, batch):
+        return M_lm.lm_prefill(params, cfg, tokens=batch.get("tokens"),
+                               embeds=batch.get("embeds"),
+                               positions=batch.get("positions"),
+                               cache_len=batch["cache_len"])
+
+    def decode_step(params, cache, batch):
+        return M_lm.lm_decode_step(params, cache, batch["tokens"], cfg)
+
+    def apply_hidden(params, batch):
+        return M_lm.lm_hidden(params, cfg, tokens=batch.get("tokens"),
+                              embeds=batch.get("embeds"),
+                              positions=batch.get("positions"))
+
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda rng: M_lm.init_lm(rng, cfg),
+        specs=lambda: M_lm.lm_specs(cfg),
+        apply_train=apply_train,
+        prefill=prefill,
+        decode_step=decode_step,
+        make_cache=lambda b, s: M_lm.init_cache(cfg, b, s),
+        cache_specs=lambda: M_lm.cache_specs(cfg),
+        apply_hidden=apply_hidden,
+        unembed_chunk=lambda params, x: M_lm.unembed(params, x, cfg),
+    )
+
+
+def _hybrid_bundle(cfg: ModelConfig) -> ModelBundle:
+    def apply_train(params, batch):
+        return M_hybrid.hybrid_forward(params, cfg, tokens=batch["tokens"])
+
+    def prefill(params, batch):
+        return M_hybrid.hybrid_prefill(params, cfg, tokens=batch["tokens"],
+                                       cache_len=batch["cache_len"])
+
+    def decode_step(params, cache, batch):
+        return M_hybrid.hybrid_decode_step(params, cache, batch["tokens"],
+                                           cfg)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda rng: M_hybrid.init_hybrid(rng, cfg),
+        specs=lambda: M_hybrid.hybrid_specs(cfg),
+        apply_train=apply_train,
+        prefill=prefill,
+        decode_step=decode_step,
+        make_cache=lambda b, s: M_hybrid.init_hybrid_cache(cfg, b, s),
+        cache_specs=lambda: M_hybrid.hybrid_cache_specs(cfg),
+        apply_hidden=lambda params, batch: M_hybrid.hybrid_hidden(
+            params, cfg, tokens=batch["tokens"]),
+        unembed_chunk=lambda params, x: M_hybrid.hybrid_unembed(
+            params, x, cfg),
+    )
+
+
+def _encdec_bundle(cfg: ModelConfig) -> ModelBundle:
+    def apply_train(params, batch):
+        return M_encdec.encdec_forward(params, cfg, frames=batch["frames"],
+                                       dec_tokens=batch["dec_tokens"])
+
+    def prefill(params, batch):
+        return M_encdec.encdec_prefill(params, cfg, frames=batch["frames"],
+                                       dec_tokens=batch["dec_tokens"],
+                                       cache_len=batch["cache_len"])
+
+    def decode_step(params, cache, batch):
+        return M_encdec.encdec_decode_step(params, cache, batch["tokens"],
+                                           cfg)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda rng: M_encdec.init_encdec(rng, cfg),
+        specs=lambda: M_encdec.encdec_specs(cfg),
+        apply_train=apply_train,
+        prefill=prefill,
+        decode_step=decode_step,
+        make_cache=lambda b, s: M_encdec.init_encdec_cache(
+            cfg, b, s, ENCDEC_DECODE_ENC_LEN),
+        cache_specs=lambda: M_encdec.encdec_cache_specs(cfg),
+        apply_hidden=lambda params, batch: M_encdec.encdec_hidden(
+            params, cfg, frames=batch["frames"],
+            dec_tokens=batch["dec_tokens"]),
+        unembed_chunk=lambda params, x: M_encdec.encdec_unembed(
+            params, x, cfg),
+    )
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _lm_bundle(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        return _hybrid_bundle(cfg)
+    if cfg.family == "encdec":
+        return _encdec_bundle(cfg)
+    raise ValueError(f"unknown family: {cfg.family}")

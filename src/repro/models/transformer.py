@@ -1,0 +1,272 @@
+"""Decoder-only LM: scan-over-layers transformer for dense / MoE / VLM.
+
+Design notes (DESIGN.md §5):
+
+* layer parameters are stacked on a leading ``layers`` axis and consumed by
+  ``lax.scan`` — one compiled layer body regardless of depth (88-layer
+  configs compile as fast as 4-layer ones, and remat applies per layer);
+* three entry points share the layer body: ``forward`` (training),
+  ``prefill`` (returns a padded KV cache), ``decode_step`` (one token);
+* MoE layers thread an auxiliary load-balance loss through the scan carry;
+* activations may enter as token ids (LM) or precomputed embeddings
+  (VLM / audio stub frontends).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models.attention import (
+    attention_block,
+    attention_decode,
+    attention_prefill,
+    attention_specs,
+    init_attention,
+)
+from repro.models.common import (
+    KeyGen,
+    apply_norm,
+    cast_tree,
+    embed_init,
+    init_norm,
+    norm_specs,
+)
+from repro.models.mlp import init_mlp, mlp_block, mlp_specs
+from repro.models.moe import init_moe, moe_block, moe_specs
+
+
+# ---------------------------------------------------------------------------
+# Init / specs
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    kg = KeyGen(key)
+    p: Dict[str, Any] = {
+        "attn_norm": init_norm(cfg.norm, cfg.d_model),
+        "attn": init_attention(kg(), cfg),
+        "mlp_norm": init_norm(cfg.norm, cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(kg(), cfg)
+    else:
+        p["mlp"] = init_mlp(kg(), cfg)
+    return p
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    kg = KeyGen(key)
+    layer_keys = jax.random.split(kg(), cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    params: Dict[str, Any] = {
+        "embed": embed_init(kg(), (cfg.vocab_size, cfg.d_model)),
+        "layers": layers,
+        "final_norm": init_norm(cfg.norm, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(kg(), (cfg.d_model, cfg.vocab_size))
+    return cast_tree(params, jnp.dtype(cfg.dtype))
+
+
+def lm_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    lp: Dict[str, Any] = {
+        "attn_norm": norm_specs(cfg.norm),
+        "attn": attention_specs(cfg),
+        "mlp_norm": norm_specs(cfg.norm),
+    }
+    if cfg.family == "moe":
+        lp["moe"] = moe_specs(cfg)
+    else:
+        lp["mlp"] = mlp_specs(cfg)
+    # prepend the stacked "layers" axis to every layer param
+    lp = jax.tree_util.tree_map(lambda s: ("layers",) + s, lp,
+                                is_leaf=lambda s: isinstance(s, tuple))
+    specs: Dict[str, Any] = {
+        "embed": ("vocab", "embed_unsharded"),
+        "layers": lp,
+        "final_norm": norm_specs(cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ("embed_unsharded", "vocab")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layer body
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(lp: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig,
+               positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = x + attention_block(
+        lp["attn"], apply_norm(cfg.norm, x, lp["attn_norm"], cfg.norm_eps),
+        cfg, positions=positions, causal=True)
+    h = logical_constraint(h, "batch", "seq", None)
+    hn = apply_norm(cfg.norm, h, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe_block(lp["moe"], hn, cfg)
+    else:
+        y, aux = mlp_block(lp["mlp"], hn, cfg), jnp.zeros((), jnp.float32)
+    out = h + y
+    out = logical_constraint(out, "batch", "seq", None)
+    return out, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def unembed(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = x @ params["unembed"].astype(x.dtype)
+    return logical_constraint(logits, "batch", "seq", "vocab")
+
+
+def lm_hidden(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    *,
+    tokens: Optional[jnp.ndarray] = None,     # (B, S) int32
+    embeds: Optional[jnp.ndarray] = None,     # (B, S, D) — VLM/audio stubs
+    positions: Optional[jnp.ndarray] = None,  # (B,S) or (3,B,S) for M-RoPE
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Backbone forward. Returns (final-norm hidden (B,S,D), aux_loss) —
+    the loss path unembeds per sequence chunk so full (B,S,V) logits never
+    materialize (§Perf iteration C2')."""
+    x = embed_tokens(params, tokens, cfg) if embeds is None \
+        else embeds.astype(jnp.dtype(cfg.dtype))
+    x = logical_constraint(x, "batch", "seq", None)
+
+    body = _remat(
+        lambda lp, x_: _layer_fwd(lp, x_, cfg, positions), cfg)
+
+    def scan_body(carry, lp):
+        x_, aux = carry
+        x_new, aux_l = body(lp, x_)
+        return (x_new, aux + aux_l), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def lm_forward(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    *,
+    tokens: Optional[jnp.ndarray] = None,
+    embeds: Optional[jnp.ndarray] = None,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward. Returns (logits (B,S,V), aux_loss)."""
+    x, aux = lm_hidden(params, cfg, tokens=tokens, embeds=embeds,
+                       positions=positions)
+    return unembed(params, x, cfg), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, cache_len, kvh, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    kv = ("layers", "batch", None, "kv_heads", "head_dim")
+    return {"k": kv, "v": kv, "len": ()}
+
+
+def lm_prefill(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    *,
+    tokens: Optional[jnp.ndarray] = None,
+    embeds: Optional[jnp.ndarray] = None,
+    positions: Optional[jnp.ndarray] = None,
+    cache_len: int,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Prefill pass: returns (last-token logits (B,V), populated cache)."""
+    x = embed_tokens(params, tokens, cfg) if embeds is None \
+        else embeds.astype(jnp.dtype(cfg.dtype))
+    x = logical_constraint(x, "batch", "seq", None)
+    s = x.shape[1]
+
+    def scan_body(x_, lp):
+        h = apply_norm(cfg.norm, x_, lp["attn_norm"], cfg.norm_eps)
+        a, (kc, vc) = attention_prefill(lp["attn"], h, cfg, cache_len,
+                                        positions=positions)
+        h = x_ + a
+        hn = apply_norm(cfg.norm, h, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_block(lp["moe"], hn, cfg)
+        else:
+            y = mlp_block(lp["mlp"], hn, cfg)
+        out = logical_constraint(h + y, "batch", "seq", None)
+        return out, (kc, vc)
+
+    x, (k_all, v_all) = jax.lax.scan(scan_body, x, params["layers"])
+    x = apply_norm(cfg.norm, x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)[:, 0]
+    cache = {"k": k_all, "v": v_all,
+             "len": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def lm_decode_step(
+    params: Dict[str, Any],
+    cache: Dict[str, Any],
+    tokens: jnp.ndarray,          # (B, 1) int32
+    cfg: ModelConfig,
+    embeds: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One decode step: returns (logits (B,V), updated cache)."""
+    x = embed_tokens(params, tokens, cfg) if embeds is None \
+        else embeds.astype(jnp.dtype(cfg.dtype))
+    pos = cache["len"]
+
+    def scan_body(x_, layer):
+        lp, kc, vc = layer
+        h = apply_norm(cfg.norm, x_, lp["attn_norm"], cfg.norm_eps)
+        a, kc_new, vc_new = attention_decode(lp["attn"], h, kc, vc, pos, cfg)
+        h = x_ + a
+        hn = apply_norm(cfg.norm, h, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_block(lp["moe"], hn, cfg)
+        else:
+            y = mlp_block(lp["mlp"], hn, cfg)
+        return h + y, (kc_new, vc_new)
+
+    x, (k_all, v_all) = jax.lax.scan(
+        scan_body, x, (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)[:, 0]
+    new_cache = {"k": k_all, "v": v_all, "len": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,3 @@
+"""Optimizers (pure JAX — no optax on the box)."""
+from repro.optim.adamw import adafactor, adamw, apply_updates, clip_by_global_norm  # noqa: F401
+from repro.optim.schedules import constant, cosine_schedule, linear_warmup_cosine  # noqa: F401

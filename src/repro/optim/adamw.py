@@ -1,0 +1,153 @@
+"""AdamW and Adafactor as (init, update) pairs over arbitrary pytrees.
+
+Interface mirrors optax: ``opt = adamw(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params =
+apply_updates(params, updates)``.
+
+Adafactor (factored second moment, no first moment by default) is provided
+for the 1T-parameter configs where AdamW's 12 bytes/param of state cannot fit
+the pod (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw(lr: Callable | float, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          state_dtype: jnp.dtype = jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree_util.tree_map(zeros, params),
+                          v=jax.tree_util.tree_map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(state_dtype)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(state_dtype))
+            return u, m_new, v_new
+
+        flat = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                         is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+        return updates, AdamWState(step=step, m=m, v=v)
+
+    return Optimizer(init=init, update=update)
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any   # row second-moment (or full v for <2D leaves)
+    vc: Any   # col second-moment (None marker: zeros(0) for <2D leaves)
+
+
+def adafactor(lr: Callable | float, *, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern '18), beta1=0.
+
+    For >=2-D leaves the second moment is stored as a row vector + column
+    vector over the trailing two dims: O(n+m) state instead of O(n*m).
+    """
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr_init(p):
+            if factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            if factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((0,), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=jax.tree_util.tree_map(vr_init, params),
+            vc=jax.tree_util.tree_map(vc_init, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(p):
+                vr_new = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc_new = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r = vr_new / jnp.maximum(
+                    jnp.mean(vr_new, axis=-1, keepdims=True), eps)
+                prec = (r[..., None] * vc_new[..., None, :])
+                u = g * jax.lax.rsqrt(jnp.maximum(prec, eps))
+            else:
+                vr_new = beta2 * vr + (1 - beta2) * g2
+                vc_new = vc
+                u = g * jax.lax.rsqrt(jnp.maximum(vr_new, eps))
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr_t * (u + weight_decay * p.astype(jnp.float32))
+            return u, vr_new, vc_new
+
+        flat = jax.tree_util.tree_map(upd, grads, state.vr, state.vc, params)
+        is_t = lambda t_: isinstance(t_, tuple)
+        updates = jax.tree_util.tree_map(lambda x: x[0], flat, is_leaf=is_t)
+        vr = jax.tree_util.tree_map(lambda x: x[1], flat, is_leaf=is_t)
+        vc = jax.tree_util.tree_map(lambda x: x[2], flat, is_leaf=is_t)
+        return updates, AdafactorState(step=step, vr=vr, vc=vc)
+
+    return Optimizer(init=init, update=update)

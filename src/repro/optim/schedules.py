@@ -1,0 +1,27 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def schedule(step):
+        return jnp.asarray(value, jnp.float32)
+    return schedule
+
+
+def cosine_schedule(peak: float, total_steps: int, final_frac: float = 0.1):
+    def schedule(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak * (final_frac + (1 - final_frac) * cos)
+    return schedule
+
+
+def linear_warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(peak, max(total_steps - warmup_steps, 1), final_frac)
+    def schedule(step):
+        warm = peak * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return schedule

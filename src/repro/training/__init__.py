@@ -1,0 +1,8 @@
+"""Training/serving step factories and the fault-tolerant outer loop."""
+from repro.training.step import (  # noqa: F401
+    TrainState,
+    make_decode_step,
+    make_eval_step,
+    make_prefill_step,
+    make_train_step,
+)

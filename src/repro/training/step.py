@@ -1,0 +1,163 @@
+"""train_step / serve_step factories over a ModelBundle.
+
+* next-token (or teacher-forced) cross-entropy with z-loss and the MoE
+  load-balance auxiliary;
+* microbatched gradient accumulation (``cfg.microbatches``) via ``lax.scan``
+  — the activation live-set shrinks by the microbatch factor while the HLO
+  stays one fused loop;
+* gradient clipping + optional gradient compression hook;
+* AdamW or Adafactor per config (1T models cannot afford AdamW state).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.compression import CompressionConfig, compress_grads
+from repro.models.registry import ModelBundle
+from repro.optim import adafactor, adamw, apply_updates, clip_by_global_norm
+
+Z_LOSS_COEF = 1e-4
+MOE_AUX_COEF = 1e-2
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt_state: Any
+
+
+def make_optimizer(cfg: ModelConfig, lr=3e-4):
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr)
+    return adamw(lr, b1=0.9, b2=0.95, weight_decay=0.1)
+
+
+def _label_key(cfg: ModelConfig) -> str:
+    return "labels"
+
+
+N_LOSS_CHUNKS = 8
+
+
+def _xent_terms(logits: jnp.ndarray, labels: jnp.ndarray):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse, gold
+
+
+def loss_fn(params, batch: Dict[str, Any], bundle: ModelBundle
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    labels = batch[_label_key(bundle.cfg)]
+    s = labels.shape[1]
+    if (bundle.cfg.chunked_loss and bundle.apply_hidden is not None
+            and bundle.unembed_chunk is not None
+            and s % N_LOSS_CHUNKS == 0 and s >= 2 * N_LOSS_CHUNKS):
+        # §Perf iteration C2': fused chunked unembed + xent. The backbone
+        # returns (B, S, D) hidden states; each sequence chunk is unembedded
+        # and soft-maxed inside a jax.checkpoint, so only (B, S/8, V)
+        # logits ever exist (saved residuals: lse/gold, (B, S) f32).
+        x, aux = bundle.apply_hidden(params, batch)
+
+        def chunk_terms(params_, xc, lc):
+            return _xent_terms(bundle.unembed_chunk(params_, xc), lc)
+
+        chunk = s // N_LOSS_CHUNKS
+        terms = [jax.checkpoint(chunk_terms)(
+            params, x[:, i * chunk:(i + 1) * chunk],
+            labels[:, i * chunk:(i + 1) * chunk])
+            for i in range(N_LOSS_CHUNKS)]
+        lse = jnp.concatenate([t[0] for t in terms], axis=1)
+        gold = jnp.concatenate([t[1] for t in terms], axis=1)
+    else:
+        logits, aux = bundle.apply_train(params, batch)
+        lse, gold = _xent_terms(logits, labels)
+    nll = (lse - gold).mean()
+    z_loss = Z_LOSS_COEF * jnp.square(lse).mean()
+    total = nll + z_loss + MOE_AUX_COEF * aux
+    return total, {"loss": nll, "z_loss": z_loss, "moe_aux": aux}
+
+
+def _split_microbatches(batch: Dict[str, Any], m: int) -> Dict[str, Any]:
+    """Reshape each leaf's batch dim into (m, b/m). 'positions' is (3,B,S)."""
+    def split(key, x):
+        axis = 1 if key == "positions" else 0
+        b = x.shape[axis]
+        assert b % m == 0, f"batch {b} not divisible by microbatches {m}"
+        new_shape = x.shape[:axis] + (m, b // m) + x.shape[axis + 1:]
+        x = x.reshape(new_shape)
+        return jnp.moveaxis(x, axis, 0)
+
+    return {k: split(k, v) for k, v in batch.items()}
+
+
+def make_train_step(
+    bundle: ModelBundle,
+    optimizer=None,
+    *,
+    compression: Optional[CompressionConfig] = None,
+    clip_norm: float = 1.0,
+) -> Callable[[TrainState, Dict[str, Any]], Tuple[TrainState, Dict]]:
+    cfg = bundle.cfg
+    opt = optimizer or make_optimizer(cfg)
+    m = max(cfg.microbatches, 1)
+    grad_fn = jax.value_and_grad(functools.partial(loss_fn, bundle=bundle),
+                                 has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        if m == 1:
+            (_, metrics), grads = grad_fn(state.params, batch)
+        else:
+            micro = _split_microbatches(batch, m)
+
+            def acc_body(carry, mb):
+                g_acc, met_acc = carry
+                (_, met), g = grad_fn(state.params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                met_acc = jax.tree_util.tree_map(jnp.add, met_acc, met)
+                return (g_acc, met_acc), None
+
+            acc_dt = jnp.dtype(cfg.grad_acc_dtype)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), state.params)
+            met0 = {"loss": jnp.zeros(()), "z_loss": jnp.zeros(()),
+                    "moe_aux": jnp.zeros(())}
+            (grads, metrics), _ = jax.lax.scan(acc_body, (g0, met0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / m, grads)
+            metrics = jax.tree_util.tree_map(lambda v: v / m, metrics)
+
+        if compression is not None:
+            grads = compress_grads(grads, compression)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return TrainState(state.step + 1, params, opt_state), metrics
+
+    return train_step, opt
+
+
+def make_eval_step(bundle: ModelBundle):
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch, bundle)
+        return metrics
+    return eval_step
+
+
+def make_prefill_step(bundle: ModelBundle, cache_len: int):
+    def prefill_step(params, batch):
+        batch = dict(batch, cache_len=cache_len)
+        return bundle.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(bundle: ModelBundle):
+    def decode_step(params, cache, batch):
+        return bundle.decode_step(params, cache, batch)
+    return decode_step

@@ -1,0 +1,19 @@
+"""shard_map expert-parallel MoE == pjit sort MoE (values + grads).
+
+Runs in a subprocess with 8 forced host devices (the main pytest process
+must keep a single device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_ep_a2a_equivalence_subprocess():
+    script = os.path.join(os.path.dirname(__file__),
+                          "ep_equivalence_check.py")
+    proc = subprocess.run([sys.executable, script], capture_output=True,
+                          text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "EP equivalence OK" in proc.stdout

@@ -1,0 +1,79 @@
+"""Evolutionary NAS loop with a mock trainer: selection + dormant-gene cache."""
+import numpy as np
+
+from repro.core.evolution import EvolutionarySearch, NASConfig
+from repro.core.objectives import cheap_matrix
+from repro.core.pareto import pareto_front
+from repro.core.selection import (
+    inverse_density_weights,
+    preselect_children,
+    sample_parents,
+)
+from repro.core.trainer import TrainResult
+
+
+def mock_trainer(calls):
+    def train(g):
+        calls.append(g.phenotype_hash())
+        det = min(0.99, 0.75 + 0.04 * g.depth())
+        return TrainResult(detection_rate=det,
+                           false_alarm_rate=max(0.0, 0.25 - 0.03 * g.depth()),
+                           val_loss=0.3, steps=0)
+    return train
+
+
+def make_search(calls, **kw):
+    cfg = NASConfig(generations=4, children_per_gen=8, n_accept=4,
+                    init_population=6, n_workers=2, seed=0, **kw)
+    return EvolutionarySearch(cfg, None, None, train_fn=mock_trainer(calls),
+                              log=lambda *_: None)
+
+
+def test_search_progresses_and_respects_capacity():
+    calls = []
+    s = make_search(calls)
+    state = s.run()
+    assert state.generation == 4
+    assert len(state.population) <= s.cfg.population_cap
+    objs = np.stack([c.objective_vector() for c in state.population])
+    assert len(pareto_front(objs)) >= 1
+    assert len(state.history) == 4
+
+
+def test_dormant_gene_cache_prevents_retraining():
+    calls = []
+    s = make_search(calls)
+    state = s.run()
+    # every phenotype hash is trained at most once
+    assert len(calls) == len(set(calls))
+    assert set(calls) <= set(state.evaluated_hashes)
+
+
+def test_solution_selection_honours_constraints():
+    calls = []
+    s = make_search(calls)
+    state = s.run()
+    sol = s.select_solution(state, "energy_max_alpha_j")
+    if sol is not None:
+        assert sol.meets_constraints(s.cfg.det_min, s.cfg.fa_max)
+
+
+def test_kde_weights_prefer_sparse_regions():
+    # dense cluster at origin + one isolated point: the isolated point must
+    # receive the largest parent-sampling weight
+    pts = np.vstack([np.random.default_rng(0).normal(0, 0.01, (20, 3)),
+                     np.array([[10.0, 10.0, 10.0]])])
+    w = inverse_density_weights(pts)
+    assert np.argmax(w) == 20
+    assert np.isclose(w.sum(), 1.0)
+
+
+def test_preselection_size_and_bounds():
+    rng = np.random.default_rng(0)
+    pop = rng.normal(size=(12, 4))
+    children = rng.normal(size=(30, 4))
+    idx = preselect_children(rng, pop, children, 10)
+    assert len(idx) == 10 and len(set(idx.tolist())) == 10
+    assert idx.max() < 30
+    few = preselect_children(rng, pop, children[:5], 10)
+    assert len(few) == 5

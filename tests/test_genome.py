@@ -1,0 +1,85 @@
+"""Genome encoding: validity, dormant genes, mutation/crossover invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.genome import (
+    Genome,
+    crossover,
+    decode_shapes,
+    mutate,
+    random_genome,
+)
+from repro.core.search_space import DEFAULT_SPACE
+
+SP = DEFAULT_SPACE
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_random_genome_always_valid(seed):
+    g = random_genome(np.random.default_rng(seed), SP)
+    assert g.is_valid(SP)
+    assert SP.min_depth <= g.depth() <= SP.max_depth
+    shapes = decode_shapes(g, SP)
+    assert all(l >= 1 and c >= 1 for l, c in shapes)
+    # head is always GAP + dense(n_classes)
+    assert shapes[-1] == (1, SP.n_classes)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_forced_mutation_changes_phenotype(seed):
+    rng = np.random.default_rng(seed)
+    g = random_genome(rng, SP)
+    m = mutate(g, rng, SP, force_active_change=True)
+    assert m.is_valid(SP)
+    if m is not g:  # mutate may give up after max_tries on rare genomes
+        assert m.phenotype_hash(SP) != g.phenotype_hash(SP)
+
+
+def test_dormant_gene_mutation_is_neutral():
+    """Mutating only dormant (inactive) genes must keep the phenotype."""
+    rng = np.random.default_rng(1)
+    g = random_genome(rng, SP)
+    active = set(g.active_nodes())
+    dormant = [i for i in range(len(g.op_genes)) if i not in active]
+    if not dormant:
+        pytest.skip("genome with all nodes active")
+    ops = list(g.op_genes)
+    ops[dormant[0]] = (ops[dormant[0]] + 1) % SP.n_ops
+    g2 = Genome(tuple(ops), g.conn_genes, g.out_gene, g.w_bits_gene,
+                g.a_bits_gene, g.i_bits_gene, g.dec_gene)
+    assert g2.phenotype_hash(SP) == g.phenotype_hash(SP)
+
+
+def test_dormant_gene_can_reactivate():
+    """A connection-gene mutation can re-express previously dormant genes."""
+    rng = np.random.default_rng(2)
+    for _ in range(200):
+        g = random_genome(rng, SP)
+        m = mutate(g, rng, SP, force_active_change=True)
+        before = set(g.active_nodes())
+        after = set(m.active_nodes())
+        if after - before:
+            return  # some node went from dormant to active
+    pytest.fail("no reactivation observed in 200 mutations")
+
+
+@given(s1=st.integers(0, 5000), s2=st.integers(0, 5000))
+@settings(max_examples=30, deadline=None)
+def test_crossover_valid(s1, s2):
+    rng = np.random.default_rng(s1 + 7 * s2)
+    a = random_genome(np.random.default_rng(s1), SP)
+    b = random_genome(np.random.default_rng(s2), SP)
+    c = crossover(a, b, rng, SP)
+    assert c.is_valid(SP)
+
+
+def test_phenotype_hash_depends_on_quant_and_decimation():
+    rng = np.random.default_rng(3)
+    g = random_genome(rng, SP)
+    g2 = Genome(g.op_genes, g.conn_genes, g.out_gene,
+                (g.w_bits_gene + 1) % len(SP.weight_bits),
+                g.a_bits_gene, g.i_bits_gene, g.dec_gene)
+    assert g.phenotype_hash(SP) != g2.phenotype_hash(SP)

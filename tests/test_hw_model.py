@@ -1,0 +1,86 @@
+"""Eq. (1)-(4) hardware-model properties (paper §IV)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.genome import random_genome
+from repro.core.hw_model import (
+    FPGA_ZU,
+    TPU_V5E,
+    estimate,
+    latency_cycles,
+    layer_costs_for,
+    resolve_alphas,
+    roofline,
+    sample_runtime_cycles,
+)
+from repro.core.search_space import DEFAULT_SPACE
+
+
+def _genome(seed):
+    return random_genome(np.random.default_rng(seed), DEFAULT_SPACE)
+
+
+@given(seed=st.integers(0, 2000))
+@settings(max_examples=40, deadline=None)
+def test_unrolling_never_slower_never_cheaper_power(seed):
+    """Paper §IV: high alpha reduces runtime superlinearly but raises power."""
+    g = _genome(seed)
+    lo = estimate(g, strategy="min", profile=FPGA_ZU)
+    hi = estimate(g, strategy="max", profile=FPGA_ZU)
+    assert hi.t_total_s <= lo.t_total_s + 1e-12
+    assert hi.throughput_sps >= lo.throughput_sps - 1e-9
+    assert hi.p_total_w >= lo.p_total_w - 1e-9
+
+
+@given(seed=st.integers(0, 2000))
+@settings(max_examples=40, deadline=None)
+def test_energy_is_power_times_time(seed):
+    g = _genome(seed)
+    for strat in ("min", "max"):
+        e = estimate(g, strategy=strat, profile=FPGA_ZU)
+        assert e.e_total_j == pytest.approx(e.t_total_s * e.p_total_w,
+                                            rel=1e-9)
+        assert e.e_wall_j > e.e_total_j  # board power adds on top
+
+
+@given(seed=st.integers(0, 2000))
+@settings(max_examples=40, deadline=None)
+def test_sigma_recursion_monotone(seed):
+    """sigma_i = max(l_i, sigma_{i-1}) must be non-decreasing along the
+    pipeline, and the drain-inclusive runtime bounds the fill latency."""
+    g = _genome(seed)
+    costs = layer_costs_for(g)
+    alphas = resolve_alphas(costs, "min", FPGA_ZU)
+    t_fill, sigmas = latency_cycles(costs, alphas)
+    assert all(b >= a - 1e-9 for a, b in zip(sigmas, sigmas[1:]))
+    assert sample_runtime_cycles(costs, alphas) >= t_fill
+
+
+@given(seed=st.integers(0, 2000))
+@settings(max_examples=30, deadline=None)
+def test_alpha_resolution_within_bounds(seed):
+    g = _genome(seed)
+    costs = layer_costs_for(g)
+    for strat in ("min", "max"):
+        alphas = resolve_alphas(costs, strat, FPGA_ZU)
+        assert all(1 <= a <= c.alpha_max for a, c in zip(alphas, costs))
+    total = sum(resolve_alphas(costs, "max", FPGA_ZU))
+    assert total <= FPGA_ZU.alpha_cap
+
+
+def test_profiles_scale_power():
+    g = _genome(123)
+    zu = estimate(g, strategy="max", profile=FPGA_ZU)
+    tpu = estimate(g, strategy="max", profile=TPU_V5E)
+    assert tpu.throughput_sps > zu.throughput_sps  # higher clock, more units
+
+
+def test_roofline_terms():
+    t = roofline(flops=1e15, bytes_hbm=1e12, bytes_collective=1e11,
+                 chips=256)
+    assert t.compute_s == pytest.approx(1e15 / (256 * 197e12))
+    assert t.memory_s == pytest.approx(1e12 / (256 * 819e9))
+    assert t.collective_s == pytest.approx(1e11 / (256 * 50e9))
+    assert t.dominant in ("compute", "memory", "collective")
+    assert 0 < t.roofline_fraction() <= 1.0

@@ -1,0 +1,52 @@
+"""NAS search-state checkpointing: preempt mid-search, resume, identical
+machinery state (population, caches, history)."""
+import numpy as np
+
+from repro.core.evolution import EvolutionarySearch, NASConfig
+from repro.core.trainer import TrainResult
+
+
+def _mock(g):
+    return TrainResult(detection_rate=min(0.99, 0.7 + 0.05 * g.depth()),
+                       false_alarm_rate=max(0.0, 0.3 - 0.03 * g.depth()),
+                       val_loss=0.4, steps=0)
+
+
+def _search(seed=0):
+    cfg = NASConfig(generations=4, children_per_gen=6, n_accept=3,
+                    init_population=4, n_workers=2, seed=seed)
+    return EvolutionarySearch(cfg, None, None, train_fn=_mock,
+                              log=lambda *_: None)
+
+
+def test_save_load_roundtrip(tmp_path):
+    s = _search()
+    state = s.init_state()
+    state = s.step(state)
+    path = str(tmp_path / "nas.json")
+    s.save_state(state, path)
+    restored = s.load_state(path)
+    assert restored.generation == state.generation
+    assert len(restored.population) == len(state.population)
+    for a, b in zip(state.population, restored.population):
+        assert a.phash == b.phash
+        assert a.genome == b.genome
+        np.testing.assert_allclose(a.cheap, b.cheap)
+    assert set(restored.evaluated_hashes) == set(state.evaluated_hashes)
+
+
+def test_resume_after_preemption(tmp_path):
+    path = str(tmp_path / "nas.json")
+    # run 2 generations, "preempt"
+    s1 = _search()
+    state = s1.init_state()
+    for _ in range(2):
+        state = s1.step(state)
+        s1.save_state(state, path)
+    # fresh process resumes and completes to 4
+    s2 = _search()
+    final = s2.run_resumable(path, generations=4)
+    assert final.generation == 4
+    assert len(final.history) >= 2
+    # dormant-gene cache survived the restart
+    assert set(state.evaluated_hashes) <= set(final.evaluated_hashes)

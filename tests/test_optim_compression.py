@@ -1,0 +1,68 @@
+"""Optimizers + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.compression import CompressionConfig, EFTopK, compress_grads
+from repro.optim import adafactor, adamw, apply_updates, clip_by_global_norm
+
+
+def _rosenbrock_ish(params):
+    return jnp.sum((params["w"] - 3.0) ** 2) + jnp.sum(
+        (params["m"] @ params["m"].T - jnp.eye(4)) ** 2)
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adamw(1e-1), lambda: adafactor(1e-1)])
+def test_optimizers_descend(make_opt):
+    params = {"w": jnp.zeros((8,)), "m": jnp.eye(4) * 0.3}
+    opt = make_opt()
+    state = opt.init(params)
+    loss0 = float(_rosenbrock_ish(params))
+    for _ in range(60):
+        grads = jax.grad(_rosenbrock_ish)(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(_rosenbrock_ish(params)) < 0.2 * loss0
+
+
+def test_adafactor_state_is_factored():
+    params = {"big": jnp.zeros((128, 256))}
+    opt = adafactor(1e-2)
+    state = opt.init(params)
+    assert state.vr["big"].shape == (128,)
+    assert state.vc["big"].shape == (256,)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 100.0)}
+    clipped, gn = clip_by_global_norm(grads, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(10) * 100)
+    norm_after = float(jnp.linalg.norm(clipped["a"]))
+    assert norm_after == pytest.approx(1.0, rel=1e-5)
+
+
+def test_bf16_compression_roundtrip():
+    grads = {"g": jnp.asarray(np.random.default_rng(0).normal(size=(64,)),
+                              jnp.float32)}
+    out = compress_grads(grads, CompressionConfig(mode="bf16"))
+    assert out["g"].dtype == jnp.float32
+    assert float(jnp.abs(out["g"] - grads["g"]).max()) < 0.01
+
+
+def test_ef_topk_error_feedback_conserves_mass():
+    """sent + residual must equal grad + previous residual (no loss)."""
+    ef = EFTopK(frac=0.1)
+    g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(100,)),
+                          jnp.float32)}
+    res = ef.init(g)
+    sent, res = ef.compress(g, res)
+    np.testing.assert_allclose(np.asarray(sent["w"] + res["w"]),
+                               np.asarray(g["w"]), rtol=1e-6)
+    nnz = int(jnp.sum(sent["w"] != 0))
+    assert nnz <= 15  # ~top 10 + ties
+    # second step re-injects the residual
+    sent2, res2 = ef.compress(g, res)
+    np.testing.assert_allclose(np.asarray(sent2["w"] + res2["w"]),
+                               np.asarray(g["w"] + res["w"]), rtol=1e-6)

@@ -1,0 +1,62 @@
+"""Pareto machinery: properties of non-dominated sorting and selection."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.pareto import (
+    crowding_distance,
+    dominates,
+    environmental_selection,
+    hypervolume_2d,
+    non_dominated_sort,
+    pareto_front,
+)
+
+points_st = hnp.arrays(np.float64, hnp.array_shapes(min_dims=2, max_dims=2,
+                                                    min_side=1, max_side=40),
+                       elements=st.floats(0, 100, allow_nan=False))
+
+
+@given(points_st)
+@settings(max_examples=60, deadline=None)
+def test_fronts_partition_and_order(pts):
+    fronts = non_dominated_sort(pts)
+    all_idx = np.concatenate(fronts) if fronts else np.array([])
+    assert sorted(all_idx.tolist()) == list(range(len(pts)))
+    # front 0 contains no dominated point
+    f0 = set(fronts[0].tolist())
+    for i in f0:
+        for j in range(len(pts)):
+            assert not (j != i and dominates(pts[j], pts[i]))
+    # each later front is dominated by someone in an earlier front
+    for k in range(1, len(fronts)):
+        for i in fronts[k]:
+            assert any(dominates(pts[j], pts[i])
+                       for f in fronts[:k] for j in f)
+
+
+@given(points_st, st.integers(1, 20))
+@settings(max_examples=40, deadline=None)
+def test_environmental_selection_capacity_and_front0(pts, cap):
+    keep = environmental_selection(pts, cap)
+    assert len(keep) == min(cap, len(pts))
+    assert len(set(keep.tolist())) == len(keep)
+    # if capacity allows, all of front 0 is kept
+    f0 = pareto_front(pts)
+    if len(f0) <= cap:
+        assert set(f0.tolist()) <= set(keep.tolist())
+
+
+def test_crowding_boundary_infinite():
+    pts = np.array([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]])
+    cd = crowding_distance(pts)
+    assert np.isinf(cd[0]) and np.isinf(cd[-1])
+    assert np.all(cd[1:-1] < np.inf)
+
+
+def test_hypervolume_monotone():
+    ref = np.array([10.0, 10.0])
+    a = np.array([[5.0, 5.0]])
+    b = np.array([[5.0, 5.0], [2.0, 8.0]])
+    assert hypervolume_2d(b, ref) >= hypervolume_2d(a, ref)
+    assert hypervolume_2d(a, ref) == 25.0

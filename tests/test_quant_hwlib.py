@@ -1,0 +1,107 @@
+"""hwlib: layer costs match real shapes; quantization & BN folding; profiler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.genome import random_genome
+from repro.core.search_space import DEFAULT_SPACE
+from repro.core.trainer import forward, init_candidate
+from repro.hwlib.layers import (
+    DWSEP_CONV,
+    LayerSpec,
+    apply_layer,
+    init_layer,
+    layer_cost,
+    out_shape,
+)
+from repro.hwlib.profiler import profile_accumulators
+from repro.hwlib.quant import (
+    QuantConfig,
+    fake_quant,
+    fold_batchnorm,
+    fold_model,
+)
+
+
+@given(seed=st.integers(0, 3000))
+@settings(max_examples=30, deadline=None)
+def test_cost_model_matches_real_shapes(seed):
+    """The analytic (out_len, channels) must equal the traced shapes."""
+    g = random_genome(np.random.default_rng(seed), DEFAULT_SPACE)
+    specs = g.phenotype(DEFAULT_SPACE)
+    params = init_candidate(jax.random.PRNGKey(0), specs)
+    x = jnp.zeros((2, g.input_length(DEFAULT_SPACE), 2))
+    l, c = x.shape[1], 2
+    h = x
+    for p, s in zip(params, specs):
+        cost = layer_cost(s, l, c)
+        h = apply_layer(p, s, h, train=False)
+        if s.kind in (DWSEP_CONV, "maxpool"):
+            assert h.shape == (2, cost.out_len, cost.out_channels)
+        else:
+            assert h.shape == (2, cost.out_channels)
+        l, c = cost.out_len, cost.out_channels
+        assert cost.params == sum(
+            int(np.prod(v.shape)) for k, v in p.items()
+            if k in ("dw", "pw", "b", "w"))
+
+
+@given(bits=st.integers(2, 16), seed=st.integers(0, 100))
+@settings(max_examples=40, deadline=None)
+def test_fake_quant_properties(bits, seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(64,)) * 3)
+    q = fake_quant(x, bits)
+    # bounded distortion: one quantization step
+    step = float(jnp.max(jnp.abs(x))) / (2 ** (bits - 1) - 1)
+    assert float(jnp.max(jnp.abs(q - x))) <= step + 1e-6
+    # idempotent-ish: quantizing a quantized tensor changes nothing
+    q2 = fake_quant(q, bits)
+    assert float(jnp.max(jnp.abs(q2 - q))) <= 1e-6
+    # 32 bits = identity
+    assert jnp.allclose(fake_quant(x, 32), x)
+
+
+def test_bn_folding_preserves_inference():
+    spec = LayerSpec(kind=DWSEP_CONV, out_channels=8, kernel_size=3,
+                     stride=1, use_bn=True)
+    params = init_layer(jax.random.PRNGKey(0), spec, 4)
+    # make running stats non-trivial
+    params["bn_mean"] = jnp.asarray(np.random.default_rng(0).normal(size=8),
+                                    jnp.float32)
+    params["bn_var"] = jnp.asarray(
+        np.random.default_rng(1).uniform(0.5, 2.0, 8), jnp.float32)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(2, 32, 4)),
+                    jnp.float32)
+    y_bn = apply_layer(params, spec, x, train=False)
+    folded = fold_batchnorm(params, spec)
+    assert "bn_scale" not in folded
+    y_folded = apply_layer(folded, spec, x, train=False)
+    np.testing.assert_allclose(np.asarray(y_bn), np.asarray(y_folded),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fold_model_then_forward(tiny_ecg):
+    g = random_genome(np.random.default_rng(5), DEFAULT_SPACE)
+    specs = g.phenotype(DEFAULT_SPACE)
+    params = init_candidate(jax.random.PRNGKey(1), specs)
+    x = jnp.asarray(tiny_ecg[0][0][:4, :g.input_length(DEFAULT_SPACE)])
+    y_ref = forward(params, specs, x)
+    folded = fold_model(params, specs)
+    y_fold = forward(folded, specs, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_fold),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_profiler_formats_cover_range():
+    g = random_genome(np.random.default_rng(7), DEFAULT_SPACE)
+    specs = g.phenotype(DEFAULT_SPACE)
+    params = init_candidate(jax.random.PRNGKey(2), specs)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(8, g.input_length(DEFAULT_SPACE), 2)), jnp.float32)
+    formats = profile_accumulators(params, specs, x)
+    assert len(formats) == len(specs)
+    for f in formats:
+        assert f.int_bits >= 1 and f.frac_bits >= 0
+        assert f.total_bits <= 40  # sane accumulator width

@@ -1,0 +1,64 @@
+"""Dynamic workload scheduler: retries, failure containment, stragglers."""
+import threading
+import time
+
+from repro.core.scheduler import DynamicScheduler
+
+
+def test_all_jobs_complete():
+    sched = DynamicScheduler(n_workers=4, speculate=False)
+    results = sched.run([lambda i=i: i * i for i in range(20)])
+    assert [r.value for r in results] == [i * i for i in range(20)]
+    assert all(r.ok for r in results)
+
+
+def test_retry_on_transient_failure():
+    attempts = {}
+    lock = threading.Lock()
+
+    def flaky(i):
+        with lock:
+            attempts[i] = attempts.get(i, 0) + 1
+            if attempts[i] == 1 and i % 3 == 0:
+                raise RuntimeError("transient node failure")
+        return i
+
+    sched = DynamicScheduler(n_workers=3, max_retries=2, speculate=False)
+    results = sched.run([lambda i=i: flaky(i) for i in range(9)])
+    assert all(r.ok for r in results)
+    assert [r.value for r in results] == list(range(9))
+    assert any(r.attempts > 1 for r in results)
+
+
+def test_permanent_failure_reported_not_raised():
+    def bad():
+        raise ValueError("broken candidate")
+
+    sched = DynamicScheduler(n_workers=2, max_retries=1, speculate=False)
+    results = sched.run([bad, lambda: 42])
+    assert not results[0].ok and "broken candidate" in results[0].error
+    assert results[1].ok and results[1].value == 42
+
+
+def test_straggler_speculation():
+    """A hung job is duplicated after timeout_s and the twin's result wins."""
+    state = {"first": True}
+    lock = threading.Lock()
+    release = threading.Event()
+
+    def hangs_once():
+        with lock:
+            first = state["first"]
+            state["first"] = False
+        if first:
+            release.wait(timeout=2.0)  # simulated straggler
+            return "slow"
+        return "fast"
+
+    sched = DynamicScheduler(n_workers=2, max_retries=0, timeout_s=0.3,
+                             speculate=True)
+    results = sched.run([hangs_once])
+    release.set()
+    assert results[0].ok
+    assert results[0].value in ("fast", "slow")
+    assert results[0].value == "fast"  # the speculative twin finished first

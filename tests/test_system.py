@@ -1,0 +1,95 @@
+"""End-to-end behaviour tests for the full system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.evolution import EvolutionarySearch, NASConfig
+from repro.core.genome import random_genome
+from repro.core.trainer import train_candidate
+from repro.data.lm import LMDataConfig, data_iterator
+from repro.models.registry import build_model
+from repro.training.loop import LoopConfig, train_loop
+
+
+@pytest.mark.slow
+def test_nas_end_to_end_on_ecg(tiny_ecg):
+    """The paper's flow at micro scale: the NAS must find a candidate that
+    meets (relaxed) detection/false-alarm constraints on synthetic ECG."""
+    (tr, va) = tiny_ecg
+    cfg = NASConfig(generations=2, children_per_gen=4, n_accept=2,
+                    init_population=3, train_steps=80, train_batch=32,
+                    n_workers=2, seed=0, det_min=0.8, fa_max=0.3)
+    search = EvolutionarySearch(cfg, tr, va, log=lambda *_: None)
+    state = search.run()
+    assert state.generation == 2
+    feasible = [c for c in state.population if c.meets_constraints(0.8, 0.3)]
+    assert feasible, "no candidate met detection>=0.8 / fa<=0.3"
+
+
+@pytest.mark.slow
+def test_candidate_training_learns(tiny_ecg):
+    (tr, va) = tiny_ecg
+    g = random_genome(np.random.default_rng(3))
+    res = train_candidate(g, tr, va, steps=120, batch_size=32, seed=0)
+    assert res.detection_rate > 0.6
+    assert res.false_alarm_rate < 0.4
+
+
+@pytest.mark.slow
+def test_lm_training_reduces_loss(tmp_path):
+    cfg = reduced_config("qwen2-0.5b")
+    bundle = build_model(cfg)
+    data_cfg = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                            global_batch=8)
+    out = train_loop(
+        bundle, lambda s: data_iterator(data_cfg, s),
+        LoopConfig(total_steps=40, ckpt_every=1000, log_every=5,
+                   ckpt_dir=str(tmp_path)),
+        log=lambda *_: None)
+    losses = out["losses"]
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_serving_batched_requests():
+    """Prefill a batch of prompts, decode several tokens greedily."""
+    cfg = reduced_config("qwen3-4b")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0,
+                                 cfg.vocab_size)
+    logits, cache = bundle.prefill(params, {"tokens": prompts,
+                                            "cache_len": 24})
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    outs = []
+    for _ in range(6):
+        logits, cache = bundle.decode_step(params, cache, {"tokens": tok})
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        outs.append(np.asarray(tok))
+    seq = np.concatenate(outs, axis=1)
+    assert seq.shape == (4, 6)
+    assert int(cache["len"]) == 18
+    assert seq.min() >= 0 and seq.max() < cfg.vocab_size
+
+
+def test_compiled_candidate_deployment(tiny_ecg):
+    """NAS winner -> compile_candidate -> quantized inference still meets
+    the constraints it was selected under (HALF's deployment contract)."""
+    from repro.core.compile_model import compile_candidate
+    from repro.core.trainer import evaluate, forward, init_candidate
+    (tr, va) = tiny_ecg
+    g = random_genome(np.random.default_rng(11))
+    specs = g.phenotype()
+    params = init_candidate(jax.random.PRNGKey(0), specs)
+    want_len = g.input_length()
+    stride = tr[0].shape[1] // want_len
+    x_cal = jnp.asarray(tr[0][:16, :want_len * stride:stride])
+    compiled = compile_candidate(g, params, x_cal)
+    assert len(compiled.alphas) == len(specs)
+    assert compiled.estimate_max.throughput_sps >= \
+        compiled.estimate_min.throughput_sps
+    # quantized+folded params still run
+    y = forward(compiled.params, specs, x_cal, quant=None)
+    assert y.shape == (16, 2)
+    assert not bool(jnp.isnan(y).any())
