@@ -1,0 +1,80 @@
+"""Population evaluation throughput: scalar loop vs batched engine.
+
+Measures genomes/sec of cheap-objective evaluation (all 7 analytic
+objectives, min+max alpha) at population sizes {64, 512, 4096}:
+
+* ``scalar`` — the per-genome reference loop (`cheap_objectives` per child),
+  timed on a capped subsample and extrapolated (it is O(N) in python);
+* ``batched`` — `cheap_objectives_batch` through the FPGAAnalyticBackend,
+  timed end-to-end including the array encoding step.
+
+Medians over several repetitions keep the speedup figure stable on noisy
+boxes.  Acceptance target: >= 10x at population 512.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.genome import random_genome
+from repro.core.objectives import cheap_objectives, cheap_objectives_batch
+from repro.core.search_space import DEFAULT_SPACE
+
+SIZES = (64, 512, 4096)
+SCALAR_CAP = 128   # scalar loop sample size (timing extrapolates linearly)
+REPEATS = 7
+
+
+def _time(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(log=print) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    log(f"[pop_eval] sampling {max(SIZES)} genomes ...")
+    genomes = [random_genome(rng, DEFAULT_SPACE) for _ in range(max(SIZES))]
+    rows: List[Dict] = []
+    for n in SIZES:
+        pop = genomes[:n]
+        n_scalar = min(n, SCALAR_CAP)
+        for _ in range(2):                                # warm-up
+            cheap_objectives_batch(pop)
+            [cheap_objectives(g) for g in pop[:8]]
+        # paired measurements: scalar and batched sampled back-to-back so
+        # machine-state drift (throttling, noisy neighbours) cancels in
+        # the per-pair ratio
+        t_b, t_s, ratios = [], [], []
+        for _ in range(REPEATS):
+            tb = _time(lambda: cheap_objectives_batch(pop))
+            ts = _time(
+                lambda: [cheap_objectives(g) for g in pop[:n_scalar]]) \
+                / n_scalar * n
+            t_b.append(tb)
+            t_s.append(ts)
+            ratios.append(ts / tb)
+        t_batch = float(np.median(t_b))
+        t_scalar = float(np.median(t_s))
+        gps_b, gps_s = n / t_batch, n / t_scalar
+        speedup = float(np.median(ratios))
+        log(f"[pop_eval] n={n}: batched {gps_b:,.0f} g/s, "
+            f"scalar {gps_s:,.0f} g/s, speedup {speedup:.1f}x")
+        rows.append({
+            "name": f"pop_eval_batched_{n}",
+            "us_per_call": t_batch * 1e6,
+            "derived": f"{gps_b:.0f}genomes/s speedup={speedup:.1f}x",
+        })
+        rows.append({
+            "name": f"pop_eval_scalar_{n}",
+            "us_per_call": t_scalar * 1e6,
+            "derived": f"{gps_s:.0f}genomes/s",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")

@@ -20,8 +20,10 @@ def main() -> None:
     rows = []
     t0 = time.time()
 
-    from benchmarks import kernel_bench, roofline_table
+    from benchmarks import kernel_bench, population_eval_bench, roofline_table
     rows += kernel_bench.run(log=lambda *a: print(*a, file=sys.stderr))
+    rows += population_eval_bench.run(
+        log=lambda *a: print(*a, file=sys.stderr))
     rows += roofline_table.run(log=lambda *a: print(*a, file=sys.stderr))
     roofline_table.write_markdown(log=lambda *a: print(*a, file=sys.stderr))
 

@@ -1,5 +1,20 @@
 """HALF's contribution: hardware-aware evolutionary NAS + analytic hw models."""
+from repro.core.cost_backend import (  # noqa: F401
+    CostBackend,
+    FPGAAnalyticBackend,
+    TPURooflineBackend,
+    get_backend,
+)
 from repro.core.evolution import EvolutionarySearch, NASConfig  # noqa: F401
-from repro.core.genome import Genome, mutate, random_genome  # noqa: F401
-from repro.core.hw_model import estimate, roofline  # noqa: F401
+from repro.core.genome import (  # noqa: F401
+    Genome,
+    PopulationEncoding,
+    mutate,
+    random_genome,
+)
+from repro.core.hw_model import (  # noqa: F401
+    estimate,
+    estimate_population,
+    roofline,
+)
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace  # noqa: F401

@@ -1,0 +1,168 @@
+"""Pluggable cost backends for batched cheap-objective evaluation.
+
+The search layers never touch Eq. 1-4 (or roofline) math directly: they hand
+a :class:`~repro.core.genome.PopulationEncoding` to a :class:`CostBackend`
+and get back an ``(N, 7)`` objective matrix in ``CHEAP_NAMES`` order
+(DESIGN.md §2).  Two implementations ship:
+
+* :class:`FPGAAnalyticBackend` — the paper's analytic Eq. 1-4 models,
+  vectorized over the population, for any :class:`HardwareProfile` (the four
+  calibrated profiles in :mod:`repro.core.hw_model`).
+* :class:`TPURooflineBackend` — the three-term v5e roofline.  Besides scoring
+  genomes it owns the shared :meth:`~TPURooflineBackend.roofline_terms`
+  helper consumed by :mod:`repro.core.tpu_codesign` and
+  :mod:`repro.launch.roofline`, so the pod-scale roofline math lives in
+  exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Dict, Protocol, Union, runtime_checkable
+
+import numpy as np
+
+from repro.core.genome import Genome, PopulationEncoding
+from repro.core.hw_model import (
+    FPGA_ZU,
+    PROFILES,
+    TPU_V5E,
+    HardwareProfile,
+    RooflineTerms,
+    batch_estimate,
+    population_layer_costs,
+    roofline,
+)
+from repro.core.search_space import DEFAULT_SPACE, SearchSpace
+
+
+@runtime_checkable
+class CostBackend(Protocol):
+    """Scores populations analytically — the search's hot loop."""
+
+    name: str
+
+    def evaluate_batch(self, enc: PopulationEncoding, *,
+                       space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
+        """``(N, 7)`` cheap-objective matrix (``CHEAP_NAMES`` order)."""
+        ...
+
+    def evaluate(self, g: Genome, *,
+                 space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
+        """``(7,)`` objectives for a single genome."""
+        ...
+
+
+class FPGAAnalyticBackend:
+    """Vectorized Eq. 1-4 evaluation against one hardware profile.
+
+    Bit-for-bit consistent with the scalar ``estimate``/``cheap_objectives``
+    reference path (tests/test_cost_backend_parity.py).
+    """
+
+    def __init__(self, profile: HardwareProfile = FPGA_ZU):
+        self.profile = profile
+        self.name = f"fpga_analytic[{profile.name}]"
+
+    def evaluate_batch(self, enc: PopulationEncoding, *,
+                       space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
+        costs = population_layer_costs(enc, space)
+        lo = batch_estimate(costs, strategy="min", profile=self.profile)
+        hi = batch_estimate(costs, strategy="max", profile=self.profile)
+        return np.stack([
+            lo.p_total_w, hi.p_total_w,
+            lo.e_total_j, hi.e_total_j,
+            lo.latency_s, hi.latency_s,
+            lo.params.astype(np.float64),
+        ], axis=1)
+
+    def evaluate(self, g: Genome, *,
+                 space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
+        enc = PopulationEncoding.from_genomes([g])
+        return self.evaluate_batch(enc, space=space)[0]
+
+
+class TPURooflineBackend:
+    """Three-term roofline cost model (v5e constants) as a CostBackend.
+
+    For genome scoring the mapping is deliberately simple (same altitude as
+    Eq. 1-4 — good enough to rank candidates, DESIGN.md §2): the ``min``-α
+    column models a fully folded datapath (one MAC per cycle); the ``max``-α
+    column is the roofline bound over compute and HBM terms, with the implied
+    parallelism driving the power model.
+    """
+
+    name = "tpu_roofline"
+
+    def __init__(self, profile: HardwareProfile = TPU_V5E):
+        self.profile = profile
+
+    # ---- the shared pod-roofline helper (codesign + launch consume this)
+    def roofline_terms(self, flops: float, bytes_hbm: float,
+                       bytes_collective: float, chips: int) -> RooflineTerms:
+        return roofline(flops, bytes_hbm, bytes_collective, chips)
+
+    # ---- genome scoring --------------------------------------------------
+    def evaluate_batch(self, enc: PopulationEncoding, *,
+                       space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
+        costs = population_layer_costs(enc, space)
+        macs = np.where(costs.valid, costs.total_macs, 0).sum(axis=1) \
+            .astype(np.float64)
+        params = np.where(costs.valid, costs.params, 0).sum(axis=1)
+        act_vals = np.where(costs.valid, costs.out_len * costs.out_channels,
+                            0).sum(axis=1).astype(np.float64)
+        w_bits = np.asarray(space.weight_bits, np.float64)[enc.w_bits]
+        a_bits = np.asarray(space.act_bits, np.float64)[enc.a_bits]
+        bytes_hbm = params * w_bits / 8.0 + act_vals * a_bits / 8.0
+
+        p = self.profile
+        lat_min = macs / p.f_clk  # fully folded: one MAC per cycle
+        terms = self.roofline_terms(2.0 * macs, bytes_hbm, 0.0, chips=1)
+        lat_max = np.maximum(terms.compute_s, terms.memory_s)
+        alpha_eff = np.clip(lat_min / np.maximum(lat_max, 1e-30),
+                            1.0, float(p.alpha_cap))
+        p_min = np.full(len(enc),
+                        p.p_static + p.p_idle_unit + p.p_calc_unit)
+        p_max = p.p_static + alpha_eff * (p.p_idle_unit + p.p_calc_unit)
+        return np.stack([
+            p_min, p_max,
+            lat_min * p_min, lat_max * p_max,
+            lat_min, lat_max,
+            params.astype(np.float64),
+        ], axis=1)
+
+    def evaluate(self, g: Genome, *,
+                 space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
+        enc = PopulationEncoding.from_genomes([g])
+        return self.evaluate_batch(enc, space=space)[0]
+
+
+# Shared singleton: every pod-roofline consumer routes through this object.
+TPU_ROOFLINE = TPURooflineBackend()
+
+_ANALYTIC_CACHE: Dict[str, FPGAAnalyticBackend] = {}
+
+BackendSpec = Union[CostBackend, HardwareProfile, str]
+
+
+def get_backend(spec: BackendSpec) -> CostBackend:
+    """Resolve a backend instance, profile, or name to a CostBackend.
+
+    Accepts a ready CostBackend (returned as-is), a
+    :class:`HardwareProfile` (wrapped in a cached FPGAAnalyticBackend), or a
+    string: one of the profile names in ``PROFILES`` or ``"tpu_roofline"``.
+    """
+    if isinstance(spec, HardwareProfile):
+        be = _ANALYTIC_CACHE.get(spec.name)
+        if be is None or be.profile is not spec:
+            be = FPGAAnalyticBackend(spec)
+            _ANALYTIC_CACHE[spec.name] = be
+        return be
+    if isinstance(spec, str):
+        if spec == TPU_ROOFLINE.name:
+            return TPU_ROOFLINE
+        if spec in PROFILES:
+            return get_backend(PROFILES[spec])
+        raise KeyError(f"unknown cost backend {spec!r} "
+                       f"(profiles: {sorted(PROFILES)}, tpu_roofline)")
+    if isinstance(spec, CostBackend):  # runtime-checkable structural match
+        return spec
+    raise TypeError(f"cannot resolve cost backend from {type(spec).__name__}")

@@ -23,12 +23,13 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import selection as sel
+from repro.core.cost_backend import BackendSpec, get_backend
 from repro.core.genome import Genome, crossover, mutate, random_genome
 from repro.core.hw_model import FPGA_ZU, HardwareProfile
 from repro.core.objectives import (
     Candidate,
     cheap_matrix,
-    cheap_objectives,
+    cheap_objectives_batch,
     expensive_objectives,
     objective_matrix,
 )
@@ -53,6 +54,7 @@ class NASConfig:
     n_workers: int = 4
     seed: int = 0
     profile: HardwareProfile = FPGA_ZU
+    backend: Optional[BackendSpec] = None  # cost backend; default = profile
     det_min: float = 0.90          # paper's hard acceptance limits
     fa_max: float = 0.20
 
@@ -76,6 +78,8 @@ class EvolutionarySearch:
         self.cfg = config
         self.space = space
         self.rng = np.random.default_rng(config.seed)
+        self.backend = get_backend(config.backend if config.backend
+                                   is not None else config.profile)
         self.log = log
         self._train_fn = train_fn or (lambda g: train_candidate(
             g, data_train, data_val, space=self.space,
@@ -85,17 +89,29 @@ class EvolutionarySearch:
                                           max_retries=2, timeout_s=1800.0)
 
     # ------------------------------------------------------------- lifecycle
+    def _score_batch(self, genomes: Sequence[Genome],
+                     hashes: Sequence[str], generation: int
+                     ) -> List[Candidate]:
+        """One batched cheap-objective pass over a genome batch."""
+        cheap = cheap_objectives_batch(genomes, backend=self.backend,
+                                       space=self.space)
+        return [Candidate(genome=g, cheap=cheap[i], phash=h,
+                          generation=generation)
+                for i, (g, h) in enumerate(zip(genomes, hashes))]
+
     def init_state(self) -> NASState:
-        pop: List[Candidate] = []
+        genomes: List[Genome] = []
+        hashes: List[str] = []
         seen = set()
-        while len(pop) < self.cfg.init_population:
+        while len(genomes) < self.cfg.init_population:
             g = random_genome(self.rng, self.space)
             h = g.phenotype_hash(self.space)
             if h in seen:
                 continue
             seen.add(h)
-            pop.append(Candidate(genome=g, cheap=cheap_objectives(
-                g, profile=self.cfg.profile, space=self.space), phash=h))
+            genomes.append(g)
+            hashes.append(h)
+        pop = self._score_batch(genomes, hashes, generation=0)
         state = NASState(population=pop, generation=0,
                          evaluated_hashes={}, history=[])
         self._train_batch(state, pop)
@@ -107,7 +123,8 @@ class EvolutionarySearch:
         cheap = cheap_matrix(pop)
         parents_idx = sel.sample_parents(self.rng, cheap,
                                          self.cfg.children_per_gen)
-        children: List[Candidate] = []
+        child_genomes: List[Genome] = []
+        child_hashes: List[str] = []
         seen = {c.phash for c in pop}
         for pi in parents_idx:
             parent = pop[pi]
@@ -128,12 +145,12 @@ class EvolutionarySearch:
             if h in seen:
                 continue  # dormant-gene shortcut: identical phenotype
             seen.add(h)
-            children.append(Candidate(
-                genome=child_g,
-                cheap=cheap_objectives(child_g, profile=self.cfg.profile,
-                                       space=self.space),
-                phash=h, generation=state.generation + 1))
-        return children
+            child_genomes.append(child_g)
+            child_hashes.append(h)
+        if not child_genomes:
+            return []
+        return self._score_batch(child_genomes, child_hashes,
+                                 generation=state.generation + 1)
 
     def _train_batch(self, state: NASState, cands: Sequence[Candidate]):
         todo = []

@@ -20,7 +20,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
-from repro.hwlib.layers import DENSE, GLOBALPOOL, LayerSpec, out_shape
+from repro.hwlib.layers import LayerSpec, out_shape
 from repro.hwlib.quant import QuantConfig
 
 
@@ -49,8 +49,7 @@ class Genome:
     def phenotype(self, space: SearchSpace = DEFAULT_SPACE) -> List[LayerSpec]:
         """The decoded topology: active ops + the fixed GAP/dense head."""
         specs = [space.ops[self.op_genes[i]] for i in self.active_nodes()]
-        specs.append(LayerSpec(kind=GLOBALPOOL))
-        specs.append(LayerSpec(kind=DENSE, out_channels=space.n_classes))
+        specs.extend(space.head_specs())
         return specs
 
     def depth(self) -> int:
@@ -94,6 +93,138 @@ def decode_shapes(g: Genome, space: SearchSpace = DEFAULT_SPACE
         l, c = out_shape(spec, l, c)
         shapes.append((l, c))
     return shapes
+
+
+# ---------------------------------------------------------------------------
+# Batched population encoding
+# ---------------------------------------------------------------------------
+
+# Sentinel op ids for the fixed head appended to every phenotype.  The op
+# table proper occupies ids [0, n_ops); the head layers get the next two ids
+# so a whole phenotype is a single integer array (see OpCostTable.for_space).
+GAP_OP_OFFSET = 0    # id == space.n_ops
+DENSE_OP_OFFSET = 1  # id == space.n_ops + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationEncoding:
+    """A whole population as stacked integer gene arrays.
+
+    Column-for-column the same genes as :class:`Genome`, but shaped ``(N, D)``
+    /``(N,)`` so the population can be decoded and costed with vectorized
+    numpy instead of per-genome Python loops (DESIGN.md §2).  The encoding is
+    immutable; arrays must not be written through.
+    """
+
+    op: np.ndarray       # (N, D) int64 — function genes
+    conn: np.ndarray     # (N, D) int64 — connection genes
+    out: np.ndarray      # (N,)  int64 — output genes (1-indexed)
+    w_bits: np.ndarray   # (N,)  int64
+    a_bits: np.ndarray   # (N,)  int64
+    i_bits: np.ndarray   # (N,)  int64
+    dec: np.ndarray      # (N,)  int64
+
+    def __len__(self) -> int:
+        return self.op.shape[0]
+
+    @property
+    def max_depth(self) -> int:
+        return self.op.shape[1]
+
+    @classmethod
+    def from_genomes(cls, genomes: Sequence[Genome]) -> "PopulationEncoding":
+        if not genomes:
+            raise ValueError("empty population")
+        return cls(
+            op=np.asarray([g.op_genes for g in genomes], dtype=np.int64),
+            conn=np.asarray([g.conn_genes for g in genomes], dtype=np.int64),
+            out=np.asarray([g.out_gene for g in genomes], dtype=np.int64),
+            w_bits=np.asarray([g.w_bits_gene for g in genomes], dtype=np.int64),
+            a_bits=np.asarray([g.a_bits_gene for g in genomes], dtype=np.int64),
+            i_bits=np.asarray([g.i_bits_gene for g in genomes], dtype=np.int64),
+            dec=np.asarray([g.dec_gene for g in genomes], dtype=np.int64),
+        )
+
+    def genome(self, i: int) -> Genome:
+        return Genome(
+            op_genes=tuple(int(v) for v in self.op[i]),
+            conn_genes=tuple(int(v) for v in self.conn[i]),
+            out_gene=int(self.out[i]),
+            w_bits_gene=int(self.w_bits[i]),
+            a_bits_gene=int(self.a_bits[i]),
+            i_bits_gene=int(self.i_bits[i]),
+            dec_gene=int(self.dec[i]),
+        )
+
+    def to_genomes(self) -> List[Genome]:
+        return [self.genome(i) for i in range(len(self))]
+
+    # ------------------------------------------------------------ decoding
+    def decode_paths(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized active-path walk for the whole population.
+
+        Returns ``(path, depth)``: ``path`` is ``(N, D)`` with the 0-based
+        active node indices in forward (input→output) order, ``-1``-padded;
+        ``depth`` is ``(N,)``.  Connection genes satisfy ``conn[i] <= i`` so
+        the backward walk terminates within ``D`` steps for every genome.
+        """
+        n, d = self.op.shape
+        ar = np.arange(n)
+        rev = np.full((n, d), -1, dtype=np.int64)
+        node = self.out.copy()  # 1-indexed; 0 means "the input"
+        for t in range(d):
+            alive = node > 0
+            idx = np.where(alive, node - 1, 0)
+            rev[:, t] = np.where(alive, idx, -1)
+            node = np.where(alive, self.conn[ar, idx], 0)
+        depth = (rev >= 0).sum(axis=1)
+        # reverse each row's valid prefix to get forward order
+        src = depth[:, None] - 1 - np.arange(d)[None, :]
+        fwd = np.take_along_axis(rev, np.maximum(src, 0), axis=1)
+        return np.where(src >= 0, fwd, -1), depth
+
+    def phenotype_ops(self, space: SearchSpace = DEFAULT_SPACE
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Padded phenotype op-id arrays for the whole population.
+
+        Returns ``(ops, valid, depth)``: ``ops`` is ``(N, D+2)`` — the active
+        ops in forward order followed by the GAP and DENSE head sentinels
+        (ids ``n_ops`` and ``n_ops + 1``), ``-1``-padded; ``valid`` is the
+        matching boolean mask.
+        """
+        path, depth = self.decode_paths()
+        n, d = self.op.shape
+        ops = np.full((n, d + 2), -1, dtype=np.int64)
+        gathered = np.take_along_axis(self.op, np.maximum(path, 0), axis=1)
+        ops[:, :d] = np.where(path >= 0, gathered, -1)
+        ar = np.arange(n)
+        ops[ar, depth] = space.n_ops + GAP_OP_OFFSET
+        ops[ar, depth + 1] = space.n_ops + DENSE_OP_OFFSET
+        return ops, ops >= 0, depth
+
+    def input_lengths(self, space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
+        table = np.asarray([space.input_length(i)
+                            for i in range(len(space.input_decimations))],
+                           dtype=np.int64)
+        return table[self.dec]
+
+    def batch_phenotype_hash(self, space: SearchSpace = DEFAULT_SPACE
+                             ) -> List[str]:
+        """Per-genome expressed-gene hashes, identical to
+        :meth:`Genome.phenotype_hash` (the dormant-gene dedup key)."""
+        ops, _, _ = self.phenotype_ops(space)
+        shorts = [s.short() for s in space.ops]
+        shorts += [s.short() for s in space.head_specs()]
+        hashes = []
+        for i in range(len(self)):
+            parts = [shorts[o] for o in ops[i] if o >= 0]
+            parts.append(space.quant_config(int(self.w_bits[i]),
+                                            int(self.a_bits[i]),
+                                            int(self.i_bits[i])).short())
+            parts.append(f"dec{int(self.dec[i])}")
+            hashes.append(hashlib.sha1(
+                "|".join(parts).encode()).hexdigest()[:16])
+        return hashes
 
 
 # ---------------------------------------------------------------------------

@@ -26,11 +26,20 @@ with its FPGA profiler; we provide two calibration profiles:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Sequence, Tuple
 
-from repro.core.genome import Genome
+import numpy as np
+
+from repro.core.genome import Genome, PopulationEncoding
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
-from repro.hwlib.layers import LayerCost, layer_cost
+from repro.hwlib.layers import (
+    LayerCost,
+    LayerCostArrays,
+    OpCostTable,
+    batch_layer_costs,
+    layer_cost,
+)
 
 # ---------------------------------------------------------------------------
 # Hardware profiles
@@ -286,3 +295,231 @@ def estimate(g: Genome, *, strategy: str = "min",
         total_macs=sum(c.total_macs for c in costs),
         alphas=tuple(alphas),
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched population evaluation — the vectorized twin of the scalar path
+# above (DESIGN.md §2).  Every reduction walks the layer axis in the same
+# left-to-right order as the scalar loops so results match bit-for-bit.
+# ---------------------------------------------------------------------------
+
+
+def _bit_length(x: np.ndarray) -> np.ndarray:
+    """Element-wise ``int.bit_length`` (exact for 0 <= x < 2**53)."""
+    return np.frexp(x.astype(np.float64))[1]
+
+
+@functools.lru_cache(maxsize=8)
+def table_for_space(space: SearchSpace = DEFAULT_SPACE) -> OpCostTable:
+    """Op catalogue + GAP/dense head sentinels as an :class:`OpCostTable`
+    (ids ``n_ops`` and ``n_ops + 1`` — see PopulationEncoding.phenotype_ops)."""
+    return OpCostTable.from_specs(tuple(space.ops) + space.head_specs())
+
+
+def population_layer_costs(enc: PopulationEncoding,
+                           space: SearchSpace = DEFAULT_SPACE
+                           ) -> LayerCostArrays:
+    """Batched :func:`layer_costs_for` over an encoded population."""
+    ops, valid, _ = enc.phenotype_ops(space)
+    return batch_layer_costs(table_for_space(space), ops, valid,
+                             enc.input_lengths(space))
+
+
+def batch_resolve_alphas(costs: LayerCostArrays, strategy: str,
+                         profile: HardwareProfile) -> np.ndarray:
+    """Vectorized :func:`resolve_alphas`: ``(N, T)`` unrolling factors.
+
+    The scalar ``max`` loop repeatedly steps the highest-latency layer that
+    still has unrolling capacity (the "rest" branch merely skips exhausted
+    layers), and each step at most doubles that layer's factor.  A layer's
+    successive pick priorities ``l, l/2, l/4, ...`` are strictly decreasing,
+    so the loop consumes the *descending merge of per-layer doubling
+    events*: event ``(i, k)`` has priority ``l_i / 2^k`` and step size
+    ``min(2^k, alpha_max_i - 2^k)`` (the final partial step to the cap),
+    ties resolving to the lower layer index (first-max ``argmax``).
+
+    That merge has closed *round* structure.  With ``Θ = max_i l_i`` and
+    ``d_i = ceil(log2(Θ / l_i))``, event ``(i, k)`` lands in round
+    ``r = k + d_i``; scaled priorities ``M_i = l_i · 2^{d_i} ∈ [Θ, 2Θ)``
+    make every round's priority range ``[Θ/2^r, 2Θ/2^r)`` strictly above
+    the next round's, and each layer appears at most once per round.  So:
+
+    1. after ``r`` whole rounds, layer ``i`` has applied its first
+       ``c_i(r) = clip(r - d_i + 1, 0, K_i)`` events, which telescope to
+       ``min(2^{c_i}, alpha_max_i) - 1`` budget units — giving a closed-form
+       monotone total ``S(r)``;
+    2. the budget-crossing round ``r*`` (smallest ``r`` with
+       ``S(r) > budget``) is found by a ~6-step vectorized binary search;
+    3. inside round ``r*``, events run in ``M_i``-descending order (ties by
+       layer index): one tiny ``(N, T)`` sort + cumulative clip applies the
+       boundary, including the scalar loop's final partial budget step.
+
+    All arithmetic is integer-exact (the scalar loop's float priority
+    comparisons are exact too: integer MACs divided by powers of two), so
+    the factors are identical to the scalar loop, genome for genome —
+    enforced by tests/test_cost_backend_parity.py.
+    """
+    n, t_pad = costs.l_cycles.shape
+    if strategy == "min":
+        return np.ones((n, t_pad), np.int64)
+    if strategy != "max":
+        raise ValueError(strategy)
+    amax = costs.alpha_max
+    budget = (profile.alpha_cap - costs.n_layers).astype(np.int64)
+    m = np.maximum(costs.macs_per_out, 1)        # padded slots -> 1
+    k_count = _bit_length(amax - 1)              # events per layer; 0 if
+    theta = m.max(axis=1, keepdims=True)         # amax == 1 (padded slots)
+    d = _bit_length((theta - 1) // m)            # first round of layer i
+
+    def total_after(r):
+        """S(r): budget units consumed by rounds 0..r, closed form."""
+        c = np.clip(r - d + 1, 0, k_count)
+        return (np.minimum(np.left_shift(1, c), amax) - 1).sum(axis=1)
+
+    # binary search the crossing round r* = min{r : S(r) > budget}
+    lo = np.zeros(n, np.int64)
+    hi = np.full(n, int((d + k_count).max()) + 1, np.int64)
+    for _ in range(max(1, int(hi[0]).bit_length())):
+        mid = (lo + hi) >> 1
+        over = total_after(mid[:, None]) > budget
+        hi = np.where(over, mid, hi)
+        lo = np.where(over, lo, mid + 1)
+
+    # state after the last whole round (r* - 1)
+    c_prev = np.clip(lo[:, None] - d, 0, k_count)
+    a_prev = np.minimum(np.left_shift(1, c_prev), amax)
+    b_rem = np.maximum(budget - (a_prev - 1).sum(axis=1), 0)
+
+    # boundary round r*: at most one event per layer, M-descending order
+    k = lo[:, None] - d
+    alive = (k >= 0) & (k < k_count)
+    a_pre = np.left_shift(1, np.where(alive, k, 0))
+    step = np.where(alive, np.minimum(a_pre, amax - a_pre), 0)
+    big_m = m << d                                # in [theta, 2*theta)
+    key = (2 * theta - big_m) * t_pad + np.arange(t_pad)
+    key[~alive] = np.iinfo(np.int64).max          # dead events sort last
+    order = np.argsort(key, axis=1)
+    step_sorted = np.take_along_axis(step, order, axis=1)
+    cum = np.cumsum(step_sorted, axis=1)
+    applied = np.clip(b_rem[:, None] - (cum - step_sorted), 0, step_sorted)
+    np.put_along_axis(step, order, applied, axis=1)  # unsort in place
+    return a_prev + step
+
+
+def _latency_from_ratio(costs: LayerCostArrays, l_over_a: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    n, t_pad = costs.l_cycles.shape
+    t_total = np.zeros(n)
+    sigma_prev = np.ones(n)  # input arrives at one value per cycle
+    sigmas = np.zeros((n, t_pad))
+    for t in range(t_pad):
+        v = costs.valid[:, t]
+        l_j = l_over_a[:, t]
+        # parenthesized to round exactly like the scalar `t_total += ...`
+        t_total = np.where(
+            v, t_total + ((costs.n_in[:, t] - 1) * sigma_prev + l_j), t_total)
+        sigma_prev = np.where(v, np.maximum(l_j, sigma_prev), sigma_prev)
+        sigmas[:, t] = sigma_prev
+    return t_total, sigmas
+
+
+def batch_latency_cycles(costs: LayerCostArrays, alphas: np.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized Eq. (1): ``(t_total (N,), sigmas (N, T))``."""
+    return _latency_from_ratio(costs, costs.l_cycles / alphas)
+
+
+def batch_sample_runtime_cycles(costs: LayerCostArrays, alphas: np.ndarray
+                                ) -> np.ndarray:
+    """Vectorized :func:`sample_runtime_cycles` (fill + drain)."""
+    t_fill, sigmas = batch_latency_cycles(costs, alphas)
+    ar, last = np.arange(len(costs)), costs.last_index
+    return t_fill + np.maximum(0, costs.n_out[ar, last] - 1) * sigmas[ar, last]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchHwEstimate:
+    """:class:`HwEstimate` for a whole population — every field an array."""
+
+    t_total_s: np.ndarray       # (N,)
+    latency_s: np.ndarray       # (N,)
+    p_total_w: np.ndarray       # (N,)
+    e_total_j: np.ndarray       # (N,)
+    e_wall_j: np.ndarray        # (N,)
+    throughput_sps: np.ndarray  # (N,)
+    params: np.ndarray          # (N,) int64
+    total_macs: np.ndarray      # (N,) int64
+    alphas: np.ndarray          # (N, T) int64, padded slots == 1
+    valid: np.ndarray           # (N, T) bool
+
+    def __len__(self) -> int:
+        return self.t_total_s.shape[0]
+
+    def row(self, i: int) -> HwEstimate:
+        """One genome's estimate as the scalar dataclass (for reporting)."""
+        nl = int(self.valid[i].sum())
+        return HwEstimate(
+            t_total_s=float(self.t_total_s[i]),
+            latency_s=float(self.latency_s[i]),
+            p_total_w=float(self.p_total_w[i]),
+            e_total_j=float(self.e_total_j[i]),
+            e_wall_j=float(self.e_wall_j[i]),
+            throughput_sps=float(self.throughput_sps[i]),
+            params=int(self.params[i]),
+            total_macs=int(self.total_macs[i]),
+            alphas=tuple(int(a) for a in self.alphas[i, :nl]),
+        )
+
+
+def batch_estimate(costs: LayerCostArrays, *, strategy: str = "min",
+                   profile: HardwareProfile = FPGA_ZU) -> BatchHwEstimate:
+    """Vectorized :func:`estimate` over pre-tabulated population costs."""
+    n, t_pad = costs.l_cycles.shape
+    ar = np.arange(n)
+    alphas = batch_resolve_alphas(costs, strategy, profile)
+    # min-alpha leaves every factor at 1: skip the (N, T) division
+    l_over_a = costs.l_cycles if strategy == "min" \
+        else costs.l_cycles / alphas
+    t_lat, sigmas = _latency_from_ratio(costs, l_over_a)
+    last = costs.last_index
+    n_out_last = costs.n_out[ar, last]
+    t_cyc = t_lat + np.maximum(0, n_out_last - 1) * sigmas[ar, last]
+    t_s = t_cyc / profile.f_clk
+
+    # Eq. 3 — accumulated layer-by-layer in scalar order
+    p = np.full(n, profile.p_static)
+    for t in range(t_pad):
+        v = costs.valid[:, t]
+        a = alphas[:, t]
+        duty = np.minimum(1.0, costs.n_out[:, t] * l_over_a[:, t]
+                          / np.maximum(t_cyc, 1.0))
+        p = np.where(v, p + (a * profile.p_idle_unit
+                             + a * duty * profile.p_calc_unit), p)
+
+    drain = np.maximum(1.0, np.maximum(0, n_out_last - 1) * sigmas[ar, last]
+                       + l_over_a[ar, last])
+    bottleneck = np.max(
+        np.where(costs.valid, l_over_a * costs.n_out, -np.inf), axis=1)
+    thr = profile.f_clk / np.maximum(bottleneck, drain)
+
+    e = t_s * p  # Eq. 4
+    return BatchHwEstimate(
+        t_total_s=t_s,
+        latency_s=t_lat / profile.f_clk,
+        p_total_w=p,
+        e_total_j=e,
+        e_wall_j=(p + profile.p_board) * t_s,
+        throughput_sps=thr,
+        params=np.where(costs.valid, costs.params, 0).sum(axis=1),
+        total_macs=np.where(costs.valid, costs.total_macs, 0).sum(axis=1),
+        alphas=alphas,
+        valid=costs.valid,
+    )
+
+
+def estimate_population(enc: PopulationEncoding, *, strategy: str = "min",
+                        profile: HardwareProfile = FPGA_ZU,
+                        space: SearchSpace = DEFAULT_SPACE) -> BatchHwEstimate:
+    """Batched :func:`estimate`: decode + tabulate + Eq. 1-4 in one pass."""
+    return batch_estimate(population_layer_costs(enc, space),
+                          strategy=strategy, profile=profile)

@@ -16,7 +16,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.genome import Genome
+from repro.core.cost_backend import BackendSpec, get_backend
+from repro.core.genome import Genome, PopulationEncoding
 from repro.core.hw_model import FPGA_ZU, HardwareProfile, estimate
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
 from repro.core.trainer import TrainResult
@@ -47,6 +48,28 @@ def cheap_objectives(g: Genome, *, profile: HardwareProfile = FPGA_ZU,
         est_max.latency_s,
         float(est_min.params),
     ], dtype=np.float64)
+
+
+def cheap_objectives_batch(
+    genomes, *,
+    backend: Optional[BackendSpec] = None,
+    profile: HardwareProfile = FPGA_ZU,
+    space: SearchSpace = DEFAULT_SPACE,
+) -> np.ndarray:
+    """Batched :func:`cheap_objectives`: ``(N, 7)`` in ``CHEAP_NAMES`` order.
+
+    ``genomes`` is a sequence of :class:`Genome` or a ready
+    :class:`PopulationEncoding`.  Evaluation routes through a pluggable
+    :class:`~repro.core.cost_backend.CostBackend`; by default the vectorized
+    Eq. 1-4 analytic backend for ``profile`` (bit-for-bit consistent with the
+    scalar path — this is the search's hot loop, DESIGN.md §2).
+    """
+    if not isinstance(genomes, PopulationEncoding):
+        if len(genomes) == 0:
+            return np.zeros((0, len(CHEAP_NAMES)), dtype=np.float64)
+        genomes = PopulationEncoding.from_genomes(list(genomes))
+    be = get_backend(profile if backend is None else backend)
+    return be.evaluate_batch(genomes, space=space)
 
 
 def expensive_objectives(result: TrainResult) -> np.ndarray:

@@ -16,7 +16,7 @@ import dataclasses
 import itertools
 from typing import List, Sequence, Tuple
 
-from repro.hwlib.layers import DWSEP_CONV, MAXPOOL, LayerSpec
+from repro.hwlib.layers import DENSE, DWSEP_CONV, GLOBALPOOL, MAXPOOL, LayerSpec
 from repro.hwlib.quant import QuantConfig
 
 # 60 depthwise-separable conv configurations: 5 channel counts x 4 kernel
@@ -86,6 +86,17 @@ class SearchSpace:
 
     def input_length(self, dec_idx: int) -> int:
         return RAW_LENGTH // self.input_decimations[dec_idx]
+
+    def head_specs(self) -> Tuple[LayerSpec, LayerSpec]:
+        """The fixed GAP + dense head appended to every phenotype.
+
+        Single source of truth for the head's content and order: the
+        sentinel op ids ``n_ops + i`` used by the batched engine
+        (PopulationEncoding.phenotype_ops, hw_model.table_for_space) index
+        into this tuple.
+        """
+        return (LayerSpec(kind=GLOBALPOOL),
+                LayerSpec(kind=DENSE, out_channels=self.n_classes))
 
 
 DEFAULT_SPACE = SearchSpace()

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeCell
-from repro.core.hw_model import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.core.cost_backend import TPU_ROOFLINE
 from repro.core.pareto import pareto_front
 
 
@@ -92,8 +92,7 @@ def estimate_train_cell(cfg: ModelConfig, cell: ShapeCell, g: ImplGenome,
                   * causal_frac * (1.5 if g.remat == "full" else 1.0)
                   ) if cfg.n_heads else 0.0
     embed_flops = 6.0 * tokens * d * cfg.vocab_size
-    compute_s = (param_flops + attn_flops + embed_flops) \
-        / (chips * PEAK_FLOPS_BF16)
+    flops = param_flops + attn_flops + embed_flops
 
     # ---- memory (ideal-fusion altitude) ------------------------------------
     # weights traffic: every microbatch re-reads the (sharded) weights
@@ -103,7 +102,7 @@ def estimate_train_cell(cfg: ModelConfig, cell: ShapeCell, g: ImplGenome,
     act_traffic = L * act_row * (12 if g.remat == "full" else 9)
     logits_traffic = 6.0 * tokens // n_data * cfg.vocab_size \
         / (n_model if cfg.vocab_size % n_model == 0 else 1)
-    memory_s = (w_bytes + act_traffic + logits_traffic) / HBM_BW
+    bytes_hbm = w_bytes + act_traffic + logits_traffic
 
     # ---- collectives -------------------------------------------------------
     # TP all-reduce: 2 per layer fwd + 2 bwd, f32 on this backend
@@ -118,12 +117,18 @@ def estimate_train_cell(cfg: ModelConfig, cell: ShapeCell, g: ImplGenome,
                    * d * 2 * g.microbatches * cfg.capacity_factor)
         else:  # pjit sort dispatch: measured ~full (T, D) f32 AR per layer
             moe = L * 4 * t_loc * d * 4 * g.microbatches
-    collective_s = (tp_ar + fsdp + moe) / ICI_BW
+    bytes_coll = tp_ar + fsdp + moe
+
+    # memory/collective quantities above are PER DEVICE; the shared backend
+    # takes pod totals, so scale up and let it normalize back per chip.
+    terms = TPU_ROOFLINE.roofline_terms(
+        flops, bytes_hbm * chips, bytes_coll * chips, chips)
 
     # ---- activation live set ------------------------------------------------
     act_gib = (resid_stack + 2 * act_row / g.microbatches
                * (3 if g.remat == "dots" else 1)) / 2 ** 30
-    return CostEstimate(compute_s, memory_s, collective_s, act_gib)
+    return CostEstimate(terms.compute_s, terms.memory_s, terms.collective_s,
+                        act_gib)
 
 
 def enumerate_frontier(cfg: ModelConfig, cell: ShapeCell,

@@ -6,8 +6,11 @@ candidates without compiling them.  See DESIGN.md §2 for the FPGA→TPU mapping
 """
 from repro.hwlib.layers import (  # noqa: F401
     LayerCost,
+    LayerCostArrays,
     LayerSpec,
+    OpCostTable,
     apply_layer,
+    batch_layer_costs,
     init_layer,
     layer_cost,
     out_shape,

@@ -17,10 +17,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # ---------------------------------------------------------------------------
 # Layer specs
@@ -122,6 +123,152 @@ def layer_cost(spec: LayerSpec, in_len: int, in_ch: int) -> LayerCost:
         params=params,
         out_len=out_len,
         out_channels=out_ch,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched (population-wide) cost tabulation — DESIGN.md §2
+# ---------------------------------------------------------------------------
+
+# Integer kind codes for vectorized dispatch (order is arbitrary but fixed).
+KIND_CODES = {DWSEP_CONV: 0, MAXPOOL: 1, GLOBALPOOL: 2, DENSE: 3}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCostTable:
+    """Static per-op cost coefficients of an op catalogue, as arrays.
+
+    Indexed by op id.  Every :class:`LayerCost` quantity of every op kind is
+    an affine function of the running input ``(length, channels)`` state::
+
+        out_len  = (length - (ek_const + ek_is_len*length)) // es + 1
+        out_ch   = oc_const + oc_is_ch * channels
+        macs     = macs_c * channels + macs_lc * length * channels
+        params   = p_const + p_ch * channels
+        n_in     = ni_const + ni_is_len*length + ni_is_ch*channels
+
+    so a population's costs tabulate as one gather per coefficient plus flat
+    vectorized arithmetic — no per-kind branching in the hot loop.
+    """
+
+    kind: np.ndarray        # (n_ops,) int64 — KIND_CODES value
+    ek_const: np.ndarray    # effective window: conv kernel / pool stride
+    ek_is_len: np.ndarray   # 1 where the window is the whole input (gap/fc)
+    es: np.ndarray          # output stride
+    macs_c: np.ndarray      # MACs per output position, per input channel
+    macs_lc: np.ndarray     # ... per input value (gap running sum)
+    p_const: np.ndarray     # params independent of input channels (bias)
+    p_ch: np.ndarray        # params per input channel
+    ni_const: np.ndarray    # pipeline-fill values (Eq. 1 n_in), constant part
+    ni_is_len: np.ndarray   # 1 where n_in == input length (gap)
+    ni_is_ch: np.ndarray    # 1 where n_in == input channels (dense)
+    oc_const: np.ndarray    # output channels, constant part (conv/dense)
+    oc_is_ch: np.ndarray    # 1 where channels pass through (pool/gap)
+
+    @classmethod
+    def from_specs(cls, specs: Sequence[LayerSpec]) -> "OpCostTable":
+        rows = []
+        for s in specs:
+            k, st, och = s.kernel_size, s.stride, s.out_channels
+            code = KIND_CODES.get(s.kind)
+            if s.kind == DWSEP_CONV:
+                rows.append((code, k, 0, st, k + och, 0, och, k + och,
+                             k, 0, 0, och, 0))
+            elif s.kind == MAXPOOL:
+                rows.append((code, st, 0, st, st, 0, 0, 0, st, 0, 0, 0, 1))
+            elif s.kind == GLOBALPOOL:
+                rows.append((code, 0, 1, 1, 0, 1, 0, 0, 0, 1, 0, 0, 1))
+            elif s.kind == DENSE:
+                rows.append((code, 0, 1, 1, och, 0, och, och, 0, 0, 1,
+                             och, 0))
+            else:
+                raise ValueError(s.kind)
+        cols = np.asarray(rows, np.int64).T
+        return cls(*cols)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCostArrays:
+    """:class:`LayerCost` for a whole population, as ``(N, T)`` arrays.
+
+    ``T`` is the padded phenotype length (max searchable depth + GAP + dense
+    head); padded positions are masked out by ``valid`` and hold zeros.  All
+    quantities match the scalar :func:`layer_cost` exactly on valid slots.
+    """
+
+    n_in: np.ndarray          # (N, T) int64
+    l_cycles: np.ndarray      # (N, T) float64
+    n_out: np.ndarray         # (N, T) int64
+    macs_per_out: np.ndarray  # (N, T) int64
+    total_macs: np.ndarray    # (N, T) int64
+    params: np.ndarray        # (N, T) int64
+    out_len: np.ndarray       # (N, T) int64
+    out_channels: np.ndarray  # (N, T) int64
+    valid: np.ndarray         # (N, T) bool
+    n_layers: np.ndarray      # (N,)  int64 — valid layer count per genome
+
+    @property
+    def alpha_max(self) -> np.ndarray:
+        return np.maximum(1, self.macs_per_out)
+
+    @property
+    def last_index(self) -> np.ndarray:
+        """Column index of each genome's final (dense head) layer."""
+        return self.n_layers - 1
+
+    def __len__(self) -> int:
+        return self.n_in.shape[0]
+
+
+def batch_layer_costs(table: OpCostTable, ops: np.ndarray, valid: np.ndarray,
+                      in_len: np.ndarray, in_ch: int = 2) -> LayerCostArrays:
+    """Vectorized shape/cost propagation for a padded population.
+
+    ``ops`` is ``(N, T)`` op ids into ``table`` (``-1``-padded), ``valid`` the
+    matching mask, ``in_len`` the ``(N,)`` input lengths.  The layer axis is
+    walked sequentially (T is tiny); each step is vectorized over the
+    population.  Callers must pass pre-validated genomes: shapes are computed
+    with the scalar rules but nothing raises on a degenerate layer.
+    """
+    n, t_pad = ops.shape
+    safe = np.maximum(ops, 0)
+    ek = table.ek_const[safe]
+    ekl = table.ek_is_len[safe]
+    es = table.es[safe]
+    occ = table.oc_const[safe]
+    occh = table.oc_is_ch[safe]
+    # sequential part: only the (length, channels) trajectory is recurrent
+    l_in = np.empty((n, t_pad), np.int64)
+    c_in = np.empty((n, t_pad), np.int64)
+    o_len = np.empty((n, t_pad), np.int64)
+    length = in_len.astype(np.int64)
+    ch = np.full(n, in_ch, np.int64)
+    for t in range(t_pad):
+        l_in[:, t] = length
+        c_in[:, t] = ch
+        out_len = (length - (ek[:, t] + ekl[:, t] * length)) // es[:, t] + 1
+        out_ch = occ[:, t] + occh[:, t] * ch
+        o_len[:, t] = out_len
+        v = valid[:, t]
+        length = np.where(v, out_len, length)
+        ch = np.where(v, out_ch, ch)
+    # flat part: every cost column is affine in the recorded trajectory
+    vi = valid.astype(np.int64)
+    o_len *= vi
+    macs = (table.macs_c[safe] * c_in
+            + table.macs_lc[safe] * l_in * c_in) * vi
+    return LayerCostArrays(
+        n_in=(table.ni_const[safe] + table.ni_is_len[safe] * l_in
+              + table.ni_is_ch[safe] * c_in) * vi,
+        l_cycles=macs.astype(np.float64),
+        n_out=o_len,
+        macs_per_out=macs,
+        total_macs=o_len * macs,
+        params=(table.p_const[safe] + table.p_ch[safe] * c_in) * vi,
+        out_len=o_len,
+        out_channels=(occ + occh * c_in) * vi,
+        valid=valid,
+        n_layers=valid.sum(axis=1).astype(np.int64),
     )
 
 

@@ -32,13 +32,8 @@ import math
 import re
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.hw_model import (
-    HBM_BW,
-    ICI_BW,
-    PEAK_FLOPS_BF16,
-    RooflineTerms,
-    roofline,
-)
+from repro.core.cost_backend import TPU_ROOFLINE
+from repro.core.hw_model import RooflineTerms
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
@@ -339,8 +334,9 @@ def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float]]:
 def terms_from_hlo(hlo_text: str, chips: int) -> Tuple[RooflineTerms,
                                                        HloAnalysis]:
     a = analyze_hlo(hlo_text)
-    return roofline(a.flops * chips, a.bytes_hbm * chips,
-                    a.bytes_collective * chips, chips), a
+    return TPU_ROOFLINE.roofline_terms(
+        a.flops * chips, a.bytes_hbm * chips,
+        a.bytes_collective * chips, chips), a
 
 
 @dataclasses.dataclass

@@ -145,6 +145,17 @@ def moe_block(p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig,
 # gather is the reduce-scatter that FSDP backward requires.
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map without replication checking, across jax versions
+    (jax.shard_map/check_vma is the new API; experimental/check_rep the old)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def _dispatch_local(ids, n_buckets, capacity):
     """Stable-sort (row -> bucket) assignment with per-bucket capacity.
 
@@ -257,11 +268,10 @@ def moe_block_ep(p: Dict[str, jnp.ndarray], x: jnp.ndarray, cfg: ModelConfig,
     x_spec = P(batch_axes or None, model_ax, None)
     w_spec = P(model_ax, fsdp_axes or None, None)
     w_spec_down = P(model_ax, None, fsdp_axes or None)
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec_down),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )(x, p["router"], p["gate"], p["up"], p["down"])
 
     if cfg.n_shared_experts:

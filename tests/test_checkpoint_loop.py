@@ -4,6 +4,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+
 import pytest
 
 from repro.checkpoint import Checkpointer
@@ -100,12 +101,11 @@ def test_train_loop_survives_injected_failures(tmp_path):
                                       np.asarray(b, np.float32))
 
 
-def test_elastic_restore_with_resharding(tmp_path):
+def test_elastic_restore_with_resharding(tmp_path, make_auto_mesh):
     """Checkpoints are mesh-agnostic: restore with explicit shardings on the
     (single-device) 'new mesh' still works leaf-for-leaf."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_auto_mesh((1,), ("data",))
     ck = Checkpointer(str(tmp_path), keep=1)
     state = _state()
     ck.save(1, state)

@@ -1,0 +1,201 @@
+"""Batched population engine vs the scalar Eq. 1-4 reference path.
+
+The batched engine must be *bit-for-bit* consistent with the scalar
+``estimate``/``cheap_objectives`` path on every profile and strategy — the
+assertions here use exact equality, which trivially satisfies the rtol 1e-9
+contract.  Edge cases: single-layer phenotypes, fully-folded alpha, and
+alpha_cap saturation.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.cost_backend import (
+    FPGAAnalyticBackend,
+    TPU_ROOFLINE,
+    TPURooflineBackend,
+    get_backend,
+)
+from repro.core.genome import Genome, PopulationEncoding, random_genome
+from repro.core.hw_model import (
+    FPGA_ZU,
+    PROFILES,
+    batch_resolve_alphas,
+    estimate,
+    estimate_population,
+    population_layer_costs,
+)
+from repro.core.objectives import (
+    CHEAP_NAMES,
+    cheap_objectives,
+    cheap_objectives_batch,
+)
+from repro.core.search_space import DEFAULT_SPACE, SearchSpace
+
+N_SWEEP = 200
+_FIELDS = ("t_total_s", "latency_s", "p_total_w", "e_total_j", "e_wall_j",
+           "throughput_sps", "params", "total_macs")
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    rng = np.random.default_rng(0)
+    genomes = [random_genome(rng, DEFAULT_SPACE) for _ in range(N_SWEEP)]
+    return genomes, PopulationEncoding.from_genomes(genomes)
+
+
+# ---------------------------------------------------------------- encoding
+
+def test_encoding_round_trips(sweep):
+    genomes, enc = sweep
+    assert enc.to_genomes() == genomes
+
+
+def test_batch_phenotype_hash_matches_scalar(sweep):
+    genomes, enc = sweep
+    assert enc.batch_phenotype_hash(DEFAULT_SPACE) == \
+        [g.phenotype_hash(DEFAULT_SPACE) for g in genomes]
+
+
+def test_batch_decode_matches_scalar(sweep):
+    genomes, enc = sweep
+    path, depth = enc.decode_paths()
+    for i, g in enumerate(genomes):
+        active = g.active_nodes()
+        assert depth[i] == len(active)
+        assert path[i, :depth[i]].tolist() == active
+
+
+# ----------------------------------------------------- estimate parity sweep
+
+@pytest.mark.parametrize("profile", list(PROFILES.values()),
+                         ids=list(PROFILES))
+@pytest.mark.parametrize("strategy", ["min", "max"])
+def test_estimate_parity(sweep, profile, strategy):
+    """>= 200 random genomes, exact equality on every HwEstimate field."""
+    genomes, enc = sweep
+    batch = estimate_population(enc, strategy=strategy, profile=profile)
+    for i, g in enumerate(genomes):
+        ref = estimate(g, strategy=strategy, profile=profile)
+        row = batch.row(i)
+        assert row.alphas == ref.alphas
+        for field in _FIELDS:
+            assert getattr(row, field) == getattr(ref, field), \
+                (profile.name, strategy, i, field)
+
+
+@pytest.mark.parametrize("profile", list(PROFILES.values()),
+                         ids=list(PROFILES))
+def test_cheap_objectives_parity(sweep, profile):
+    genomes, enc = sweep
+    batch = cheap_objectives_batch(enc, profile=profile)
+    assert batch.shape == (len(genomes), len(CHEAP_NAMES))
+    for i, g in enumerate(genomes):
+        assert np.array_equal(batch[i], cheap_objectives(g, profile=profile))
+
+
+# ------------------------------------------------------------- edge cases
+
+def _single_layer_genome_and_space():
+    space = dataclasses.replace(DEFAULT_SPACE, min_depth=1)
+    g = Genome(op_genes=(0,) * space.max_depth,
+               conn_genes=(0,) * space.max_depth,
+               out_gene=1, w_bits_gene=0, a_bits_gene=0, i_bits_gene=0,
+               dec_gene=0)
+    assert g.depth() == 1
+    return g, space
+
+
+def test_single_layer_phenotype_parity():
+    g, space = _single_layer_genome_and_space()
+    enc = PopulationEncoding.from_genomes([g])
+    for strategy in ("min", "max"):
+        ref = estimate(g, strategy=strategy, profile=FPGA_ZU, space=space)
+        row = estimate_population(enc, strategy=strategy, profile=FPGA_ZU,
+                                  space=space).row(0)
+        assert row.alphas == ref.alphas
+        for field in _FIELDS:
+            assert getattr(row, field) == getattr(ref, field)
+
+
+def test_fully_folded_alphas_are_all_one(sweep):
+    _, enc = sweep
+    costs = population_layer_costs(enc, DEFAULT_SPACE)
+    alphas = batch_resolve_alphas(costs, "min", FPGA_ZU)
+    assert (alphas == 1).all()
+
+
+@pytest.mark.parametrize("cap", [8, 24, 100])
+def test_alpha_cap_saturation_parity(sweep, cap):
+    """Tiny resource budgets exercise the partial budget-boundary step."""
+    genomes, enc = sweep
+    tight = dataclasses.replace(FPGA_ZU, alpha_cap=cap)
+    batch = estimate_population(enc, strategy="max", profile=tight)
+    costs = population_layer_costs(enc, DEFAULT_SPACE)
+    used = np.where(costs.valid, batch.alphas, 0).sum(axis=1)
+    # one unit per layer is the free baseline; unrolling beyond it must
+    # respect the cap (caps below the layer count leave everything folded)
+    assert (used <= np.maximum(cap, costs.n_layers)).all()
+    for i in range(0, len(genomes), 7):
+        ref = estimate(genomes[i], strategy="max", profile=tight)
+        assert batch.row(i).alphas == ref.alphas
+
+
+def test_alpha_bounds(sweep):
+    _, enc = sweep
+    costs = population_layer_costs(enc, DEFAULT_SPACE)
+    for profile in PROFILES.values():
+        alphas = batch_resolve_alphas(costs, "max", profile)
+        assert (alphas[costs.valid] >= 1).all()
+        assert (alphas <= costs.alpha_max)[costs.valid].all()
+
+
+# ----------------------------------------------------------- backend layer
+
+def test_get_backend_resolution():
+    be = get_backend(FPGA_ZU)
+    assert isinstance(be, FPGAAnalyticBackend)
+    assert get_backend(FPGA_ZU) is be          # cached per profile
+    assert get_backend("fpga_zu").profile is FPGA_ZU
+    assert get_backend("tpu_roofline") is TPU_ROOFLINE
+    assert get_backend(be) is be               # pass-through
+    with pytest.raises(KeyError):
+        get_backend("no_such_backend")
+
+
+def test_tpu_roofline_backend_shape_and_monotonicity(sweep):
+    genomes, enc = sweep
+    objs = TPURooflineBackend().evaluate_batch(enc, space=DEFAULT_SPACE)
+    assert objs.shape == (len(genomes), len(CHEAP_NAMES))
+    assert np.isfinite(objs).all() and (objs > 0).all()
+    # max-alpha never slower, never cheaper in power than fully folded
+    assert (objs[:, 5] <= objs[:, 4] + 1e-12).all()   # latency
+    assert (objs[:, 1] >= objs[:, 0] - 1e-12).all()   # power
+    # single-genome evaluate agrees with the batch row
+    assert np.array_equal(TPURooflineBackend().evaluate(genomes[0]), objs[0])
+
+
+def test_evolution_routes_through_batch_backend():
+    """EvolutionarySearch init + child scoring produce the same cheap
+    objectives the scalar path would (and use the configured backend)."""
+    from repro.core.evolution import EvolutionarySearch, NASConfig
+    from repro.core.trainer import TrainResult
+
+    def fake_train(g):
+        return TrainResult(detection_rate=0.95, false_alarm_rate=0.05,
+                           val_loss=0.1, steps=0)
+
+    cfg = NASConfig(generations=1, children_per_gen=6, n_accept=2,
+                    init_population=5, n_workers=1, seed=3)
+    s = EvolutionarySearch(cfg, None, None, train_fn=fake_train,
+                           log=lambda *_: None)
+    assert isinstance(s.backend, FPGAAnalyticBackend)
+    state = s.init_state()
+    for c in state.population:
+        assert np.array_equal(c.cheap, cheap_objectives(
+            c.genome, profile=cfg.profile))
+    state = s.step(state)
+    for c in state.population:
+        assert np.array_equal(c.cheap, cheap_objectives(
+            c.genome, profile=cfg.profile))

@@ -1,6 +1,8 @@
 """Genome encoding: validity, dormant genes, mutation/crossover invariants."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.genome import (

@@ -1,6 +1,8 @@
 """Eq. (1)-(4) hardware-model properties (paper §IV)."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.genome import random_genome

@@ -1,5 +1,8 @@
 """Pareto machinery: properties of non-dominated sorting and selection."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 
