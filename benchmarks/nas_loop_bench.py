@@ -1,0 +1,237 @@
+"""Generation-step throughput: scalar (pre-SoA) loop vs the array-resident
+evolutionary loop, training stubbed.
+
+The scalar reference replicates the pre-refactor generation step exactly:
+per-genome `mutate`/`crossover`/`is_valid`/`phenotype_hash` calls,
+list-of-`Candidate` bookkeeping, the duplicated `cheap_matrix(population)`
+recompute, and the O(N²) pure-Python `non_dominated_sort_reference`.  The
+vectorized side is `EvolutionarySearch.step` over the struct-of-arrays
+state (DESIGN.md §8).  Both start from the same materialized population, so
+the measured ratio is the whole generation step's speedup.
+
+Also asserts the cheap-objective call-count regression: one
+`CostBackend.evaluate_batch` call per vectorized step (children only — the
+population matrix is cached on the SoA state, never recomputed).
+
+Acceptance target: >= 20x at population_cap=4096 (``--full``; the default
+smoke size keeps CI fast).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import selection as sel
+from repro.core.evolution import EvolutionarySearch, NASConfig, NASState
+from repro.core.genome import crossover, mutate
+from repro.core.objectives import (
+    Candidate,
+    cheap_matrix,
+    cheap_objectives_batch,
+    objective_matrix,
+)
+from repro.core.pareto import crowding_distance, non_dominated_sort_reference
+from repro.core.search_space import DEFAULT_SPACE
+from repro.core.trainer import TrainResult
+
+SMOKE_POP, FULL_POP = 256, 4096
+N_ACCEPT = 8
+VEC_REPEATS = 3
+
+STUB_EXPENSIVE = np.asarray([0.05, 0.08])
+
+
+def _stub_train(_g) -> TrainResult:
+    return TrainResult(detection_rate=1.0 - STUB_EXPENSIVE[0],
+                       false_alarm_rate=STUB_EXPENSIVE[1],
+                       val_loss=0.1, steps=0)
+
+
+class _CountingBackend:
+    """Wraps a CostBackend, counting evaluate_batch calls (the regression
+    assertion on the step's cheap-objective call count)."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = f"counting[{inner.name}]"
+        self.calls = 0
+
+    def evaluate_batch(self, enc, *, space=DEFAULT_SPACE):
+        self.calls += 1
+        return self.inner.evaluate_batch(enc, space=space)
+
+    def evaluate(self, g, *, space=DEFAULT_SPACE):
+        return self.inner.evaluate(g, space=space)
+
+
+def _make_search(n: int) -> EvolutionarySearch:
+    cfg = NASConfig(children_per_gen=max(32, n // 32), n_accept=N_ACCEPT,
+                    population_cap=n, init_population=n, n_workers=2, seed=0)
+    s = EvolutionarySearch(cfg, None, None, train_fn=_stub_train,
+                           log=lambda *_: None)
+    s.backend = _CountingBackend(s.backend)
+    return s
+
+
+def _make_state(search: EvolutionarySearch, n: int) -> NASState:
+    """A capacity-sized, fully 'trained' population (no init-train pass)."""
+    enc, hashes = search._sample_unique(n)
+    pop = search._score(enc, hashes, generation=0)
+    rng = np.random.default_rng(1234)  # spread-out expensive objectives so
+    pop.expensive = np.stack([rng.uniform(0.0, 0.3, n),     # selection has
+                              rng.uniform(0.0, 0.3, n)], axis=1)  # real work
+    cache = {str(h): pop.expensive[i] for i, h in enumerate(pop.phash)}
+    return NASState(pop=pop, generation=0, evaluated_hashes=cache,
+                    history=[])
+
+
+# ---------------------------------------------------------------------------
+# The pre-refactor scalar generation step (executable reference)
+# ---------------------------------------------------------------------------
+
+def _environmental_selection_ref(points: np.ndarray, capacity: int
+                                 ) -> np.ndarray:
+    keep: List[int] = []
+    for front in non_dominated_sort_reference(points):
+        if len(keep) + len(front) <= capacity:
+            keep.extend(front.tolist())
+        else:
+            need = capacity - len(keep)
+            cd = crowding_distance(points[front])
+            order = np.argsort(-cd, kind="stable")
+            keep.extend(front[order[:need]].tolist())
+            break
+    return np.asarray(sorted(keep), dtype=np.int64)
+
+
+def _scalar_step(population: List[Candidate], cfg: NASConfig,
+                 rng: np.random.Generator, backend,
+                 evaluated: Dict[str, np.ndarray]) -> List[Candidate]:
+    space = DEFAULT_SPACE
+    # ---- _make_children (per-genome operators, duplicated cheap_matrix)
+    cheap = cheap_matrix(population)
+    parents_idx = sel.sample_parents(rng, cheap, cfg.children_per_gen)
+    child_genomes, child_hashes = [], []
+    seen = {c.phash for c in population}
+    for pi in parents_idx:
+        parent = population[pi]
+        if rng.random() < cfg.crossover_prob and len(population) > 1:
+            mate = population[int(rng.integers(0, len(population)))]
+            g = crossover(parent.genome, mate.genome, rng, space)
+            g = mutate(g, rng, space, rate=cfg.mutation_rate,
+                       force_active_change=False)
+        else:
+            g = mutate(parent.genome, rng, space, rate=cfg.mutation_rate,
+                       force_active_change=True)
+        if not g.is_valid(space):
+            continue
+        h = g.phenotype_hash(space)
+        if h in seen:
+            continue
+        seen.add(h)
+        child_genomes.append(g)
+        child_hashes.append(h)
+    children: List[Candidate] = []
+    if child_genomes:
+        child_cheap = cheap_objectives_batch(child_genomes, backend=backend,
+                                             space=space)
+        children = [Candidate(genome=g, cheap=child_cheap[i], phash=h,
+                              generation=1)
+                    for i, (g, h) in enumerate(zip(child_genomes,
+                                                   child_hashes))]
+    # ---- step body
+    if children:
+        pop_cheap = cheap_matrix(population)  # the pre-PR recompute
+        acc_idx = sel.preselect_children(rng, pop_cheap,
+                                         cheap_matrix(children), cfg.n_accept)
+        accepted = [children[i] for i in acc_idx]
+        for c in accepted:  # training stubbed
+            c.expensive = evaluated.setdefault(c.phash, STUB_EXPENSIVE)
+    else:
+        accepted = []
+    merged = population + accepted
+    keep = _environmental_selection_ref(objective_matrix(merged),
+                                        cfg.population_cap)
+    return [merged[i] for i in keep]
+
+
+# ---------------------------------------------------------------------------
+
+def run(log=print, smoke: bool = True) -> List[Dict]:
+    n = SMOKE_POP if smoke else FULL_POP
+    search = _make_search(n)
+    log(f"[nas_loop] building population n={n} ...")
+    state = _make_state(search, n)
+    scalar_pop = state.pop.to_candidates()
+    scalar_cache = dict(state.evaluated_hashes)
+
+    # ---- vectorized generation steps (median of successive steps)
+    search.step(state)  # warm-up
+    t_vec, children_seen = [], []
+    for _ in range(VEC_REPEATS):
+        search.backend.calls = 0
+        t0 = time.perf_counter()
+        search.step(state)
+        t_vec.append(time.perf_counter() - t0)
+        children_seen.append(state.history[-1]["children"])
+        assert search.backend.calls == 1, (
+            f"regression: expected exactly 1 cheap-objective batch call per "
+            f"step (children only; the population matrix is cached on the "
+            f"SoA state), got {search.backend.calls}")
+    t_vectorized = float(np.median(t_vec))
+
+    # ---- the pre-refactor scalar step, from the same starting population
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    _scalar_step(scalar_pop, search.cfg, rng, search.backend.inner,
+                 scalar_cache)
+    t_scalar = time.perf_counter() - t0
+
+    speedup = t_scalar / t_vectorized
+    log(f"[nas_loop] n={n}: vectorized {t_vectorized * 1e3:.1f}ms/step, "
+        f"scalar {t_scalar * 1e3:.1f}ms/step, speedup {speedup:.1f}x "
+        f"(children/step ~{int(np.median(children_seen))})")
+    return [
+        {"name": f"nas_step_vectorized_{n}",
+         "us_per_call": t_vectorized * 1e6,
+         "derived": f"speedup={speedup:.1f}x "
+                    f"children={int(np.median(children_seen))} "
+                    f"cheap_evals_per_step=1"},
+        {"name": f"nas_step_scalar_{n}",
+         "us_per_call": t_scalar * 1e6,
+         "derived": "pre-SoA reference loop"},
+    ]
+
+
+def write_json(rows: List[Dict], path: str) -> None:
+    """The machine-readable result format (single writer — run.py and the
+    CLI below both route through this)."""
+    with open(path, "w") as f:
+        json.dump({"bench": "nas_loop", "rows": rows}, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help=f"population_cap={FULL_POP} (default: "
+                         f"smoke, {SMOKE_POP})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="explicit smoke mode (the default; kept for CI "
+                         "command-line clarity)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write rows as machine-readable JSON")
+    args = ap.parse_args()
+    rows = run(smoke=not args.full)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    if args.json:
+        write_json(rows, args.json)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,15 +15,29 @@ def main() -> None:
                     help="paper-scale NAS settings (hours)")
     ap.add_argument("--skip-nas", action="store_true",
                     help="only kernel + roofline benches")
+    ap.add_argument("--json", action="store_true",
+                    help="also write machine-readable per-bench results "
+                         "(BENCH_<name>.json) for perf-trajectory tracking")
     args = ap.parse_args()
 
     rows = []
     t0 = time.time()
 
-    from benchmarks import kernel_bench, population_eval_bench, roofline_table
+    from benchmarks import (
+        kernel_bench,
+        nas_loop_bench,
+        population_eval_bench,
+        roofline_table,
+    )
     rows += kernel_bench.run(log=lambda *a: print(*a, file=sys.stderr))
     rows += population_eval_bench.run(
         log=lambda *a: print(*a, file=sys.stderr))
+    nas_loop_rows = nas_loop_bench.run(
+        log=lambda *a: print(*a, file=sys.stderr), smoke=not args.full)
+    rows += nas_loop_rows
+    if args.json:
+        nas_loop_bench.write_json(nas_loop_rows, "BENCH_nas_loop.json")
+        print("# wrote BENCH_nas_loop.json", file=sys.stderr)
     rows += roofline_table.run(log=lambda *a: print(*a, file=sys.stderr))
     roofline_table.write_markdown(log=lambda *a: print(*a, file=sys.stderr))
 

@@ -13,27 +13,43 @@ Per generation (paper: 100 generations x 20 children on 4 GPUs):
    dispatched through the dynamic workload scheduler;
 5. environmental selection (non-dominated sort + crowding) trims the merged
    population back to capacity.
+
+The loop is array-resident (DESIGN.md §8): the population lives as a
+struct-of-arrays :class:`~repro.core.objectives.PopulationArrays`, children
+are produced by the vectorized genetic operators
+(:func:`~repro.core.genome.mutate_batch` / ``crossover_batch``), and
+:class:`~repro.core.objectives.Candidate` objects are materialized only for
+the ``n_accept`` children handed to the trainer (and at the
+checkpoint/report edges).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import selection as sel
 from repro.core.cost_backend import BackendSpec, get_backend
-from repro.core.genome import Genome, crossover, mutate, random_genome
+from repro.core.genome import (
+    Genome,
+    PopulationEncoding,
+    crossover_batch,
+    mutate_batch,
+    random_population,
+)
 from repro.core.hw_model import FPGA_ZU, HardwareProfile
 from repro.core.objectives import (
     Candidate,
-    cheap_matrix,
-    cheap_objectives_batch,
+    PopulationArrays,
     expensive_objectives,
-    objective_matrix,
 )
-from repro.core.pareto import environmental_selection, pareto_front
+from repro.core.pareto import (
+    domination_matrix,
+    environmental_selection,
+    pareto_front,
+)
 from repro.core.scheduler import DynamicScheduler
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
 from repro.core.trainer import TrainResult, train_candidate
@@ -61,10 +77,20 @@ class NASConfig:
 
 @dataclasses.dataclass
 class NASState:
-    population: List[Candidate]
+    pop: PopulationArrays
     generation: int
     evaluated_hashes: Dict[str, np.ndarray]  # phenotype hash -> expensive objs
     history: List[dict]
+
+    @property
+    def population(self) -> List[Candidate]:
+        """Materialized object view of the population (reports, tests).
+
+        The resident representation is the struct-of-arrays ``pop``; this
+        property builds fresh :class:`Candidate` objects on every access —
+        mutating them does not write back.
+        """
+        return self.pop.to_candidates()
 
 
 class EvolutionarySearch:
@@ -89,125 +115,152 @@ class EvolutionarySearch:
                                           max_retries=2, timeout_s=1800.0)
 
     # ------------------------------------------------------------- lifecycle
-    def _score_batch(self, genomes: Sequence[Genome],
-                     hashes: Sequence[str], generation: int
-                     ) -> List[Candidate]:
-        """One batched cheap-objective pass over a genome batch."""
-        cheap = cheap_objectives_batch(genomes, backend=self.backend,
-                                       space=self.space)
-        return [Candidate(genome=g, cheap=cheap[i], phash=h,
-                          generation=generation)
-                for i, (g, h) in enumerate(zip(genomes, hashes))]
-
-    def init_state(self) -> NASState:
-        genomes: List[Genome] = []
+    def _sample_unique(self, n: int
+                       ) -> Tuple[PopulationEncoding, List[str]]:
+        """``n`` random valid genomes with pairwise-distinct phenotypes."""
+        parts: List[PopulationEncoding] = []
         hashes: List[str] = []
         seen = set()
-        while len(genomes) < self.cfg.init_population:
-            g = random_genome(self.rng, self.space)
-            h = g.phenotype_hash(self.space)
-            if h in seen:
-                continue
-            seen.add(h)
-            genomes.append(g)
-            hashes.append(h)
-        pop = self._score_batch(genomes, hashes, generation=0)
-        state = NASState(population=pop, generation=0,
-                         evaluated_hashes={}, history=[])
-        self._train_batch(state, pop)
+        while len(hashes) < n:
+            enc = random_population(self.rng, n - len(hashes), self.space)
+            keep = []
+            for i, h in enumerate(enc.batch_phenotype_hash(self.space)):
+                if h in seen:
+                    continue
+                seen.add(h)
+                keep.append(i)
+                hashes.append(h)
+            if keep:
+                parts.append(enc.take(keep))
+        return PopulationEncoding.concatenate(parts), hashes
+
+    def _score(self, enc: PopulationEncoding, hashes: Sequence[str],
+               generation: int) -> PopulationArrays:
+        """One batched cheap-objective pass — the only cheap evaluation in a
+        generation step (the matrix is cached on the PopulationArrays)."""
+        return PopulationArrays(
+            enc=enc,
+            cheap=self.backend.evaluate_batch(enc, space=self.space),
+            expensive=np.full((len(enc), 2), np.nan),
+            phash=np.asarray(hashes, dtype=object),
+            born=np.full(len(enc), generation, dtype=np.int64))
+
+    def init_state(self) -> NASState:
+        enc, hashes = self._sample_unique(self.cfg.init_population)
+        state = NASState(pop=self._score(enc, hashes, generation=0),
+                         generation=0, evaluated_hashes={}, history=[])
+        self._train_members(state, state.pop, np.arange(len(state.pop)))
         return state
 
     # ---------------------------------------------------------------- steps
-    def _make_children(self, state: NASState) -> List[Candidate]:
-        pop = state.population
-        cheap = cheap_matrix(pop)
-        parents_idx = sel.sample_parents(self.rng, cheap,
+    def _make_children(self, state: NASState
+                       ) -> Optional[PopulationArrays]:
+        pop = state.pop
+        parents_idx = sel.sample_parents(self.rng, pop.cheap,
                                          self.cfg.children_per_gen)
-        child_genomes: List[Genome] = []
-        child_hashes: List[str] = []
-        seen = {c.phash for c in pop}
-        for pi in parents_idx:
-            parent = pop[pi]
-            if self.rng.random() < self.cfg.crossover_prob and len(pop) > 1:
-                mate = pop[int(self.rng.integers(0, len(pop)))]
-                child_g = crossover(parent.genome, mate.genome, self.rng,
-                                    self.space)
-                child_g = mutate(child_g, self.rng, self.space,
-                                 rate=self.cfg.mutation_rate,
-                                 force_active_change=False)
-            else:
-                child_g = mutate(parent.genome, self.rng, self.space,
-                                 rate=self.cfg.mutation_rate,
-                                 force_active_change=True)
-            if not child_g.is_valid(self.space):
-                continue
-            h = child_g.phenotype_hash(self.space)
+        parents = pop.enc.take(parents_idx)
+        if len(pop) > 1:
+            xo = self.rng.random(len(parents_idx)) < self.cfg.crossover_prob
+        else:
+            xo = np.zeros(len(parents_idx), dtype=bool)
+        parts: List[PopulationEncoding] = []
+        if xo.any():
+            mates = pop.enc.take(
+                self.rng.integers(0, len(pop), int(xo.sum())))
+            crossed = crossover_batch(parents.take(np.nonzero(xo)[0]), mates,
+                                      self.rng, self.space)
+            parts.append(mutate_batch(crossed, self.rng, self.space,
+                                      rate=self.cfg.mutation_rate,
+                                      force_active_change=False))
+        if not xo.all():
+            parts.append(mutate_batch(parents.take(np.nonzero(~xo)[0]),
+                                      self.rng, self.space,
+                                      rate=self.cfg.mutation_rate,
+                                      force_active_change=True))
+        children = PopulationEncoding.concatenate(parts)
+        # dormant-gene shortcut: drop children whose expressed genes match a
+        # population member or an earlier sibling
+        hashes = children.batch_phenotype_hash(self.space)
+        seen = set(pop.phash)
+        keep: List[int] = []
+        kept_hashes: List[str] = []
+        for i, h in enumerate(hashes):
             if h in seen:
-                continue  # dormant-gene shortcut: identical phenotype
+                continue
             seen.add(h)
-            child_genomes.append(child_g)
-            child_hashes.append(h)
-        if not child_genomes:
-            return []
-        return self._score_batch(child_genomes, child_hashes,
-                                 generation=state.generation + 1)
+            keep.append(i)
+            kept_hashes.append(h)
+        if not keep:
+            return None
+        return self._score(children.take(keep), kept_hashes,
+                           generation=state.generation + 1)
 
-    def _train_batch(self, state: NASState, cands: Sequence[Candidate]):
-        todo = []
-        for c in cands:
-            if c.phash in state.evaluated_hashes:  # cache hit (dormant genes)
-                c.expensive = state.evaluated_hashes[c.phash]
+    def _train_members(self, state: NASState, pop: PopulationArrays,
+                       idx: np.ndarray) -> None:
+        """Expensive-evaluate rows ``idx`` of ``pop`` (cache-first), writing
+        results into ``pop.expensive`` and the dormant-gene cache.  Genome
+        objects are materialized here only, for the training jobs."""
+        todo: List[int] = []
+        for i in idx:
+            cached = state.evaluated_hashes.get(str(pop.phash[i]))
+            if cached is not None:  # cache hit (dormant genes)
+                pop.expensive[i] = cached
             else:
-                todo.append(c)
+                todo.append(int(i))
         if not todo:
             return
-        jobs = [(lambda g=c.genome: self._train_fn(g)) for c in todo]
+        genomes = [pop.enc.genome(i) for i in todo]
+        jobs = [(lambda g=g: self._train_fn(g)) for g in genomes]
         results = self.scheduler.run(jobs)
-        for c, r in zip(todo, results):
+        for i, r in zip(todo, results):
             if r.ok:
-                c.train_result = r.value
-                c.expensive = expensive_objectives(r.value)
+                exp = expensive_objectives(r.value)
             else:  # failed after retries: pessimistic objectives, stay in pool
-                self.log(f"[nas] candidate {c.phash} failed: "
+                self.log(f"[nas] candidate {pop.phash[i]} failed: "
                          f"{r.error.splitlines()[-1] if r.error else '?'}")
-                c.expensive = np.asarray([1.0, 1.0])
-            state.evaluated_hashes[c.phash] = c.expensive
+                exp = np.asarray([1.0, 1.0])
+            pop.expensive[i] = exp
+            state.evaluated_hashes[str(pop.phash[i])] = exp
 
     def step(self, state: NASState) -> NASState:
         t0 = time.monotonic()
         children = self._make_children(state)
-        if children:
-            pop_cheap = cheap_matrix(state.population)
-            child_cheap = cheap_matrix(children)
-            acc_idx = sel.preselect_children(self.rng, pop_cheap, child_cheap,
+        if children is not None:
+            acc_idx = sel.preselect_children(self.rng, state.pop.cheap,
+                                             children.cheap,
                                              self.cfg.n_accept)
-            accepted = [children[i] for i in acc_idx]
-            self._train_batch(state, accepted)
+            accepted = children.take(acc_idx)
+            self._train_members(state, accepted,
+                                np.arange(len(accepted)))
+            merged = PopulationArrays.concat([state.pop, accepted])
+            n_children, n_trained = len(children), len(accepted)
         else:
-            accepted = []
+            merged = state.pop
+            n_children = n_trained = 0
 
-        merged = state.population + accepted
-        objs = objective_matrix(merged)
-        keep = environmental_selection(objs, self.cfg.population_cap)
-        new_pop = [merged[i] for i in keep]
+        objs = merged.objective_matrix()
+        # one domination matrix serves both the environmental selection and
+        # the kept population's front-size report
+        dom = domination_matrix(objs)
+        keep = environmental_selection(objs, self.cfg.population_cap, dom=dom)
+        new_pop = merged.take(keep)
 
         state.generation += 1
-        front = pareto_front(objective_matrix(new_pop))
-        feasible = [c for c in new_pop if c.meets_constraints(
-            self.cfg.det_min, self.cfg.fa_max)]
+        front = pareto_front(objs[keep], dom=dom[np.ix_(keep, keep)])
+        feasible = new_pop.feasible_mask(self.cfg.det_min, self.cfg.fa_max)
         rec = {
             "generation": state.generation,
-            "children": len(children),
-            "trained": len(accepted),
+            "children": n_children,
+            "trained": n_trained,
             "population": len(new_pop),
             "front_size": int(len(front)),
-            "feasible": len(feasible),
-            "best_energy_j": min((c.cheap[3] for c in feasible),
-                                 default=float("nan")),
+            "feasible": int(feasible.sum()),
+            "best_energy_j": float(new_pop.cheap[feasible, 3].min())
+            if feasible.any() else float("nan"),
             "elapsed_s": time.monotonic() - t0,
         }
         state.history.append(rec)
-        state.population = new_pop
+        state.pop = new_pop
         self.log(f"[nas] gen {rec['generation']:3d} "
                  f"pop={rec['population']} front={rec['front_size']} "
                  f"feasible={rec['feasible']} "
@@ -224,23 +277,27 @@ class EvolutionarySearch:
     # ------------------------------------------------------- checkpointing
     # The paper's search runs two days on a GPU farm; a preempted search
     # must resume mid-generation.  State is plain JSON (genomes are small
-    # int tuples) written atomically.
+    # int tuples) written atomically.  The driver's RNG state rides along so
+    # a resumed search is bit-identical to an uninterrupted one.
     def save_state(self, state: NASState, path: str) -> None:
         import json as _json
         import os as _os
+        pop = state.pop
+        trained = pop.trained_mask
         payload = {
             "generation": state.generation,
             "history": state.history,
             "evaluated": {k: v.tolist()
                           for k, v in state.evaluated_hashes.items()},
+            "rng_state": self.rng.bit_generator.state,
             "population": [{
-                "genome": dataclasses.asdict(c.genome),
-                "cheap": c.cheap.tolist(),
-                "expensive": None if c.expensive is None
-                else c.expensive.tolist(),
-                "phash": c.phash,
-                "generation": c.generation,
-            } for c in state.population],
+                "genome": dataclasses.asdict(pop.enc.genome(i)),
+                "cheap": pop.cheap[i].tolist(),
+                "expensive": pop.expensive[i].tolist()
+                if trained[i] else None,
+                "phash": str(pop.phash[i]),
+                "generation": int(pop.born[i]),
+            } for i in range(len(pop))],
         }
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
@@ -248,25 +305,35 @@ class EvolutionarySearch:
         _os.replace(tmp, path)
 
     def load_state(self, path: str) -> NASState:
+        """Restore a checkpoint.  Also restores this driver's RNG state (when
+        present — older checkpoints load fine without it), so resuming
+        reproduces the uninterrupted run bit-for-bit."""
         import json as _json
         with open(path) as f:
             payload = _json.load(f)
-        pop = []
-        for c in payload["population"]:
-            g = c["genome"]
-            genome = Genome(
-                op_genes=tuple(g["op_genes"]),
-                conn_genes=tuple(g["conn_genes"]),
-                out_gene=g["out_gene"], w_bits_gene=g["w_bits_gene"],
-                a_bits_gene=g["a_bits_gene"], i_bits_gene=g["i_bits_gene"],
-                dec_gene=g["dec_gene"])
-            pop.append(Candidate(
-                genome=genome, cheap=np.asarray(c["cheap"]),
-                expensive=None if c["expensive"] is None
-                else np.asarray(c["expensive"]),
-                phash=c["phash"], generation=c["generation"]))
+        members = payload["population"]
+        genomes = [Genome(
+            op_genes=tuple(m["genome"]["op_genes"]),
+            conn_genes=tuple(m["genome"]["conn_genes"]),
+            out_gene=m["genome"]["out_gene"],
+            w_bits_gene=m["genome"]["w_bits_gene"],
+            a_bits_gene=m["genome"]["a_bits_gene"],
+            i_bits_gene=m["genome"]["i_bits_gene"],
+            dec_gene=m["genome"]["dec_gene"]) for m in members]
+        expensive = np.full((len(members), 2), np.nan)
+        for i, m in enumerate(members):
+            if m["expensive"] is not None:
+                expensive[i] = m["expensive"]
+        pop = PopulationArrays(
+            enc=PopulationEncoding.from_genomes(genomes),
+            cheap=np.asarray([m["cheap"] for m in members], np.float64),
+            expensive=expensive,
+            phash=np.asarray([m["phash"] for m in members], dtype=object),
+            born=np.asarray([m["generation"] for m in members], np.int64))
+        if "rng_state" in payload:
+            self.rng.bit_generator.state = payload["rng_state"]
         return NASState(
-            population=pop, generation=payload["generation"],
+            pop=pop, generation=payload["generation"],
             evaluated_hashes={k: np.asarray(v)
                               for k, v in payload["evaluated"].items()},
             history=payload["history"])
@@ -292,8 +359,9 @@ class EvolutionarySearch:
         """Best feasible candidate for a deployment objective (paper §VI-B)."""
         from repro.core.objectives import CHEAP_NAMES
         idx = CHEAP_NAMES.index(objective)
-        feas = [c for c in state.population
-                if c.meets_constraints(self.cfg.det_min, self.cfg.fa_max)]
-        if not feas:
+        feas = state.pop.feasible_mask(self.cfg.det_min, self.cfg.fa_max)
+        if not feas.any():
             return None
-        return min(feas, key=lambda c: c.cheap[idx])
+        rows = np.nonzero(feas)[0]
+        return state.pop.candidate(
+            int(rows[np.argmin(state.pop.cheap[rows, idx])]))

@@ -20,7 +20,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
-from repro.hwlib.layers import LayerSpec, out_shape
+from repro.hwlib.layers import LayerSpec, OpCostTable, out_shape
 from repro.hwlib.quant import QuantConfig
 
 
@@ -144,6 +144,25 @@ class PopulationEncoding:
             i_bits=np.asarray([g.i_bits_gene for g in genomes], dtype=np.int64),
             dec=np.asarray([g.dec_gene for g in genomes], dtype=np.int64),
         )
+
+    def take(self, idx) -> "PopulationEncoding":
+        """Row-gather a sub-population (fancy index or boolean mask)."""
+        idx = np.asarray(idx)
+        return PopulationEncoding(
+            op=self.op[idx], conn=self.conn[idx], out=self.out[idx],
+            w_bits=self.w_bits[idx], a_bits=self.a_bits[idx],
+            i_bits=self.i_bits[idx], dec=self.dec[idx])
+
+    @classmethod
+    def concatenate(cls, parts: Sequence["PopulationEncoding"]
+                    ) -> "PopulationEncoding":
+        parts = [p for p in parts if len(p)]
+        if not parts:
+            raise ValueError("empty concatenation")
+        if len(parts) == 1:
+            return parts[0]
+        return cls(*(np.concatenate([getattr(p, f.name) for p in parts])
+                     for f in dataclasses.fields(cls)))
 
     def genome(self, i: int) -> Genome:
         return Genome(
@@ -314,6 +333,186 @@ def crossover(a: Genome, b: Genome, rng: np.random.Generator,
         if cand.is_valid(space):
             return cand
     return a
+
+
+# ---------------------------------------------------------------------------
+# Vectorized genetic operators (DESIGN.md §8)
+#
+# Batch counterparts of random_genome / mutate / crossover / is_valid over a
+# whole PopulationEncoding.  Each is a rejection sampler drawing candidate
+# gene arrays from exactly the same per-genome proposal distribution as its
+# scalar reference (the RNG is consumed in a different order, so streams
+# differ, but the output *distributions* match — tested under fixed seeds in
+# tests/test_genome_batch_ops.py).  Genomes still unresolved after max_tries
+# rounds fall back to their input row, like the scalar operators.
+# ---------------------------------------------------------------------------
+
+_COST_TABLE_CACHE: dict = {}
+
+
+def _cost_table(space: SearchSpace) -> OpCostTable:
+    """Op catalogue + head sentinels as an OpCostTable, cached per space."""
+    table = _COST_TABLE_CACHE.get(space)
+    if table is None:
+        table = OpCostTable.from_specs(tuple(space.ops) + space.head_specs())
+        _COST_TABLE_CACHE[space] = table
+    return table
+
+
+def is_valid_batch(enc: PopulationEncoding,
+                   space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
+    """Vectorized :meth:`Genome.is_valid`: ``(N,)`` bool.
+
+    Depth bounds plus the batched shape decode: a genome is valid iff every
+    phenotype layer's input window fits (``in_len >= kernel`` for convs,
+    ``in_len >= stride`` for pools — the conditions under which the scalar
+    ``out_shape`` raises), which also guarantees every spatial shape >= 1.
+    """
+    ops, valid, depth = enc.phenotype_ops(space)
+    ok = (depth >= space.min_depth) & (depth <= space.max_depth)
+    table = _cost_table(space)
+    safe = np.maximum(ops, 0)
+    ek = table.ek_const[safe]
+    ekl = table.ek_is_len[safe]
+    es = table.es[safe]
+    # only the length trajectory matters: validity never depends on channels
+    length = enc.input_lengths(space)
+    for t in range(ops.shape[1]):
+        window = ek[:, t] + ekl[:, t] * length
+        v = valid[:, t]
+        ok &= ~v | (length >= window)
+        length = np.where(v, (length - window) // es[:, t] + 1, length)
+    return ok
+
+
+def random_population(rng: np.random.Generator, n: int,
+                      space: SearchSpace = DEFAULT_SPACE,
+                      max_tries: int = 200) -> PopulationEncoding:
+    """Vectorized :func:`random_genome`: ``n`` valid genomes in a handful of
+    array draws (same chain-biased connection prior, same rejection rule)."""
+    d = space.max_depth
+    conn_hi = np.arange(1, d + 1)
+    chain = np.arange(d)
+    parts: List[PopulationEncoding] = []
+    got = 0
+    for _ in range(max_tries):
+        need = n - got
+        if need <= 0:
+            break
+        cand = PopulationEncoding(
+            op=rng.integers(0, space.n_ops, (need, d)),
+            conn=np.where(rng.random((need, d)) < 0.25,
+                          rng.integers(0, conn_hi, (need, d)),
+                          chain[None, :]),
+            out=rng.integers(space.min_depth, d + 1, need),
+            w_bits=rng.integers(0, len(space.weight_bits), need),
+            a_bits=rng.integers(0, len(space.act_bits), need),
+            i_bits=rng.integers(0, len(space.input_bits), need),
+            dec=rng.integers(0, len(space.input_decimations), need),
+        )
+        ok = is_valid_batch(cand, space)
+        if ok.any():
+            parts.append(cand.take(np.nonzero(ok)[0]))
+            got += int(ok.sum())
+    if got < n:
+        raise RuntimeError("could not sample a valid population")
+    return PopulationEncoding.concatenate(parts).take(np.arange(n))
+
+
+def mutate_batch(
+    enc: PopulationEncoding,
+    rng: np.random.Generator,
+    space: SearchSpace = DEFAULT_SPACE,
+    rate: float = 0.1,
+    force_active_change: bool = True,
+    max_tries: int = 200,
+) -> PopulationEncoding:
+    """Vectorized :func:`mutate` over a whole population.
+
+    Every genome independently redraws (from its own parent, like the scalar
+    retry loop) until the draw is valid — and, with ``force_active_change``,
+    until its phenotype hash differs from the parent's (Suganuma's forced
+    mutation).  Rows unresolved after ``max_tries`` rounds stay the parent.
+    """
+    n, d = enc.op.shape
+    base_hash = np.asarray(enc.batch_phenotype_hash(space), dtype=object) \
+        if force_active_change else None
+    out_enc = {f.name: getattr(enc, f.name).copy()
+               for f in dataclasses.fields(PopulationEncoding)}
+    conn_hi = np.arange(1, d + 1)
+    pending = np.arange(n)
+    for _ in range(max_tries):
+        if not len(pending):
+            break
+        m = len(pending)
+        op = enc.op[pending].copy()
+        conn = enc.conn[pending].copy()
+        mask = rng.random((m, d)) < rate
+        op[mask] = rng.integers(0, space.n_ops, int(mask.sum()))
+        conn = np.where(rng.random((m, d)) < rate,
+                        rng.integers(0, conn_hi, (m, d)), conn)
+        cand = PopulationEncoding(
+            op=op, conn=conn,
+            out=np.where(rng.random(m) < rate,
+                         rng.integers(1, d + 1, m), enc.out[pending]),
+            w_bits=np.where(rng.random(m) < rate,
+                            rng.integers(0, len(space.weight_bits), m),
+                            enc.w_bits[pending]),
+            a_bits=np.where(rng.random(m) < rate,
+                            rng.integers(0, len(space.act_bits), m),
+                            enc.a_bits[pending]),
+            i_bits=np.where(rng.random(m) < rate,
+                            rng.integers(0, len(space.input_bits), m),
+                            enc.i_bits[pending]),
+            dec=np.where(rng.random(m) < rate,
+                         rng.integers(0, len(space.input_decimations), m),
+                         enc.dec[pending]),
+        )
+        ok = is_valid_batch(cand, space)
+        if force_active_change and ok.any():
+            ok_rows = np.nonzero(ok)[0]
+            new_hash = np.asarray(
+                cand.take(ok_rows).batch_phenotype_hash(space), dtype=object)
+            ok[ok_rows] = new_hash != base_hash[pending[ok_rows]]
+        acc = pending[ok]
+        for name in out_enc:
+            out_enc[name][acc] = getattr(cand, name)[ok]
+        pending = pending[~ok]
+    return PopulationEncoding(**out_enc)
+
+
+def crossover_batch(a: PopulationEncoding, b: PopulationEncoding,
+                    rng: np.random.Generator,
+                    space: SearchSpace = DEFAULT_SPACE,
+                    max_tries: int = 50) -> PopulationEncoding:
+    """Vectorized :func:`crossover` of row-aligned parent populations:
+    per-row single-point cut over the node slots, quant/output genes from a
+    fair-coin donor, rejection until valid (fallback: parent ``a``)."""
+    n, d = a.op.shape
+    out_enc = {f.name: getattr(a, f.name).copy()
+               for f in dataclasses.fields(PopulationEncoding)}
+    pending = np.arange(n)
+    for _ in range(max_tries):
+        if not len(pending):
+            break
+        m = len(pending)
+        keep_a = np.arange(d)[None, :] < rng.integers(1, d, m)[:, None]
+        donor_b = rng.random(m) >= 0.5
+
+        def pick(name, mask=donor_b):
+            av, bv = getattr(a, name)[pending], getattr(b, name)[pending]
+            return np.where(mask, bv, av)
+
+        cand = PopulationEncoding(
+            op=pick("op", ~keep_a), conn=pick("conn", ~keep_a),
+            out=pick("out"), w_bits=pick("w_bits"), a_bits=pick("a_bits"),
+            i_bits=pick("i_bits"), dec=pick("dec"))
+        ok = is_valid_batch(cand, space)
+        acc = pending[ok]
+        for name in out_enc:
+            out_enc[name][acc] = getattr(cand, name)[ok]
+        pending = pending[~ok]
+    return PopulationEncoding(**out_enc)
 
 
 def describe(g: Genome, space: SearchSpace = DEFAULT_SPACE) -> str:

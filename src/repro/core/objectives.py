@@ -115,3 +115,94 @@ def objective_matrix(pop: Sequence[Candidate]) -> np.ndarray:
 
 def cheap_matrix(pop: Sequence[Candidate]) -> np.ndarray:
     return np.stack([c.cheap for c in pop])
+
+
+# ---------------------------------------------------------------------------
+# Struct-of-arrays population (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PopulationArrays:
+    """A whole population as stacked arrays — the search's resident state.
+
+    Bundles the gene arrays (:class:`~repro.core.genome.PopulationEncoding`)
+    with the cheap/expensive objective matrices, phenotype hashes and birth
+    generations, so every generation-step operation (parent sampling,
+    preselection, non-dominated sort, environmental selection) runs over
+    arrays; :class:`Candidate` objects are materialized only at the edges
+    (training dispatch, checkpoints, reports).  ``expensive`` rows are NaN
+    until the member is trained; :meth:`objective_matrix` substitutes the
+    pessimistic placeholder exactly like ``Candidate.objective_vector``.
+    """
+
+    enc: "PopulationEncoding"
+    cheap: np.ndarray       # (N, 7) float64 — CHEAP_NAMES order
+    expensive: np.ndarray   # (N, 2) float64 — NaN rows = untrained
+    phash: np.ndarray       # (N,) object — phenotype-hash dedup keys
+    born: np.ndarray        # (N,) int64 — generation each member was created
+
+    def __len__(self) -> int:
+        return len(self.enc)
+
+    @property
+    def trained_mask(self) -> np.ndarray:
+        return np.isfinite(self.expensive).all(axis=1)
+
+    def objective_matrix(self) -> np.ndarray:
+        """(N, 9) full objective matrix, pessimistic where untrained."""
+        exp = np.where(np.isfinite(self.expensive), self.expensive,
+                       PESSIMISTIC_EXPENSIVE[None, :])
+        return np.concatenate([self.cheap, exp], axis=1)
+
+    def feasible_mask(self, det_min: float = 0.90, fa_max: float = 0.20
+                      ) -> np.ndarray:
+        """Vectorized ``Candidate.meets_constraints`` (untrained = False)."""
+        return (self.trained_mask
+                & ((1.0 - self.expensive[:, 0]) >= det_min)
+                & (self.expensive[:, 1] <= fa_max))
+
+    def take(self, idx) -> "PopulationArrays":
+        idx = np.asarray(idx)
+        return PopulationArrays(
+            enc=self.enc.take(idx), cheap=self.cheap[idx],
+            expensive=self.expensive[idx], phash=self.phash[idx],
+            born=self.born[idx])
+
+    @classmethod
+    def concat(cls, parts: Sequence["PopulationArrays"]
+               ) -> "PopulationArrays":
+        parts = [p for p in parts if len(p)]
+        if len(parts) == 1:
+            return parts[0]
+        return cls(
+            enc=PopulationEncoding.concatenate([p.enc for p in parts]),
+            cheap=np.concatenate([p.cheap for p in parts]),
+            expensive=np.concatenate([p.expensive for p in parts]),
+            phash=np.concatenate([p.phash for p in parts]),
+            born=np.concatenate([p.born for p in parts]))
+
+    # ------------------------------------------------------- object edges
+    def candidate(self, i: int) -> Candidate:
+        """Materialize one member as a :class:`Candidate`."""
+        trained = bool(np.isfinite(self.expensive[i]).all())
+        return Candidate(
+            genome=self.enc.genome(i), cheap=self.cheap[i].copy(),
+            expensive=self.expensive[i].copy() if trained else None,
+            phash=str(self.phash[i]), generation=int(self.born[i]))
+
+    def to_candidates(self) -> List[Candidate]:
+        return [self.candidate(i) for i in range(len(self))]
+
+    @classmethod
+    def from_candidates(cls, cands: Sequence[Candidate]
+                        ) -> "PopulationArrays":
+        exp = np.full((len(cands), len(EXPENSIVE_NAMES)), np.nan)
+        for i, c in enumerate(cands):
+            if c.expensive is not None:
+                exp[i] = c.expensive
+        return cls(
+            enc=PopulationEncoding.from_genomes([c.genome for c in cands]),
+            cheap=np.stack([np.asarray(c.cheap, np.float64) for c in cands]),
+            expensive=exp,
+            phash=np.asarray([c.phash for c in cands], dtype=object),
+            born=np.asarray([c.generation for c in cands], dtype=np.int64))

@@ -5,7 +5,7 @@ All objectives are MINIMIZED.  Callers negate "higher is better" metrics
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -15,9 +15,14 @@ def dominates(a: np.ndarray, b: np.ndarray, eps: float = 0.0) -> bool:
     return bool(np.all(a <= b + eps) and np.any(a < b - eps))
 
 
-def non_dominated_sort(points: np.ndarray) -> List[np.ndarray]:
-    """Fast non-dominated sort (Deb et al.). Returns fronts of indices,
-    front 0 = Pareto-optimal."""
+def non_dominated_sort_reference(points: np.ndarray) -> List[np.ndarray]:
+    """Pure-Python fast non-dominated sort (Deb et al.).
+
+    O(N²) with a Python inner loop — kept as the executable reference that
+    the vectorized :func:`non_dominated_sort` is property-tested against
+    (tests/test_pareto.py) and that benchmarks/nas_loop_bench.py times the
+    array-resident loop against.
+    """
     n = len(points)
     if n == 0:
         return []
@@ -45,10 +50,74 @@ def non_dominated_sort(points: np.ndarray) -> List[np.ndarray]:
     return fronts
 
 
-def pareto_front(points: np.ndarray) -> np.ndarray:
-    """Indices of the non-dominated points."""
-    fronts = non_dominated_sort(points)
-    return fronts[0] if fronts else np.asarray([], dtype=np.int64)
+def domination_matrix(points: np.ndarray, row_chunk: int = 256) -> np.ndarray:
+    """``(N, N)`` bool, ``[i, j]`` = point i dominates point j.
+
+    Built in row chunks, accumulating the all-``<=`` / any-``<`` conditions
+    one objective column at a time: the intermediates stay 2-D and
+    contiguous (cache-friendly, memory-bounded) instead of a ``(chunk, N,
+    M)`` broadcast with a strided last-axis reduction.
+    """
+    points = np.asarray(points, dtype=np.float64)
+    n, m = points.shape
+    cols = [np.ascontiguousarray(points[:, k]) for k in range(m)]
+    dom = np.empty((n, n), dtype=bool)
+    for s in range(0, n, row_chunk):
+        e = min(n, s + row_chunk)
+        le = np.ones((e - s, n), dtype=bool)   # all(a <= b)
+        lt = np.zeros((e - s, n), dtype=bool)  # any(a < b)
+        for c in cols:
+            blk = c[s:e, None]
+            le &= blk <= c[None, :]
+            lt |= blk < c[None, :]
+        dom[s:e] = le & lt
+    return dom
+
+
+def _peel_fronts(dom: np.ndarray):
+    """Yield fronts from a domination matrix (Deb peeling, vectorized).
+
+    Each round takes the zero-domination-count survivors as the next front
+    and subtracts their column counts.  Yields exactly the reference fronts,
+    ascending index order within each; lazy so callers that stop early
+    (environmental selection at capacity) skip the remaining rounds.
+    """
+    n = len(dom)
+    dom_count = dom.sum(axis=0)
+    assigned = np.zeros(n, dtype=bool)
+    n_done = 0
+    while n_done < n:
+        current = np.nonzero((dom_count == 0) & ~assigned)[0]
+        yield current
+        assigned[current] = True
+        n_done += len(current)
+        dom_count -= dom[current].sum(axis=0)
+
+
+def non_dominated_sort(points: np.ndarray,
+                       dom: Optional[np.ndarray] = None) -> List[np.ndarray]:
+    """Fast non-dominated sort (Deb et al.). Returns fronts of indices,
+    front 0 = Pareto-optimal.
+
+    Vectorized: one domination matrix plus front peeling.  Produces exactly
+    the same fronts (including the ascending index order within each front)
+    as :func:`non_dominated_sort_reference`.  Pass a precomputed ``dom``
+    (:func:`domination_matrix`) to share it across calls.
+    """
+    if len(points) == 0:
+        return []
+    return list(_peel_fronts(domination_matrix(points) if dom is None
+                             else dom))
+
+
+def pareto_front(points: np.ndarray,
+                 dom: Optional[np.ndarray] = None) -> np.ndarray:
+    """Indices of the non-dominated points (front 0 only — no peeling)."""
+    if len(points) == 0:
+        return np.asarray([], dtype=np.int64)
+    if dom is None:
+        dom = domination_matrix(points)
+    return np.nonzero(dom.sum(axis=0) == 0)[0]
 
 
 def crowding_distance(points: np.ndarray) -> np.ndarray:
@@ -68,10 +137,19 @@ def crowding_distance(points: np.ndarray) -> np.ndarray:
     return dist
 
 
-def environmental_selection(points: np.ndarray, capacity: int) -> np.ndarray:
-    """Keep `capacity` indices: fill whole fronts, break ties by crowding."""
+def environmental_selection(points: np.ndarray, capacity: int,
+                            dom: Optional[np.ndarray] = None) -> np.ndarray:
+    """Keep `capacity` indices: fill whole fronts, break ties by crowding.
+
+    Fronts are peeled lazily, so rounds past capacity are never computed.
+    Pass a precomputed ``dom`` matrix to share it across calls.
+    """
+    if len(points) == 0:
+        return np.asarray([], dtype=np.int64)
+    if dom is None:
+        dom = domination_matrix(points)
     keep: List[int] = []
-    for front in non_dominated_sort(points):
+    for front in _peel_fronts(dom):
         if len(keep) + len(front) <= capacity:
             keep.extend(front.tolist())
         else:

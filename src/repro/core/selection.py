@@ -21,6 +21,13 @@ import numpy as np
 from repro.core.pareto import normalize
 
 
+# Cap on the transient (chunk, n) kernel matrix inside GaussianKDE.density.
+# The naive (m, n, d) broadcast is tens of GB at population 10k+; densities
+# are instead computed chunk-by-chunk over the query axis with a GEMM for
+# the pairwise distances, so memory stays bounded at any population size.
+_DENSITY_CHUNK_BYTES = 64 * 1024 * 1024
+
+
 class GaussianKDE:
     """Minimal Gaussian KDE with Scott's-rule bandwidth (no scipy on box)."""
 
@@ -33,14 +40,31 @@ class GaussianKDE:
         sigma = data.std(axis=0)
         sigma = np.where(sigma > 1e-9, sigma, 1.0)
         self.h = sigma * max(n, 2) ** (-1.0 / (d + 4))  # Scott's rule
+        self._zd = data / self.h            # bandwidth-standardized data
+        self._zd_sq = np.einsum("nd,nd->n", self._zd, self._zd)
 
-    def density(self, x: np.ndarray) -> np.ndarray:
+    def density(self, x: np.ndarray, chunk: Optional[int] = None
+                ) -> np.ndarray:
+        """Density at each query row.
+
+        Pairwise squared distances come from the GEMM identity
+        ``|zx - zd|^2 = |zx|^2 + |zd|^2 - 2 zx.zd^T`` (clipped at 0 against
+        cancellation), and queries are processed in chunks sized to keep the
+        ``(chunk, n)`` kernel matrix under ``_DENSITY_CHUNK_BYTES`` (pass
+        ``chunk`` to override) — memory-bounded at population 10k+.
+        """
         x = np.atleast_2d(np.asarray(x, dtype=np.float64))
-        # (m, n, d) standardized distances
-        z = (x[:, None, :] - self.data[None, :, :]) / self.h[None, None, :]
-        k = np.exp(-0.5 * np.sum(z * z, axis=-1))
-        norm = np.prod(self.h) * (2 * np.pi) ** (self.data.shape[1] / 2)
-        return k.sum(axis=1) / (len(self.data) * norm) + 1e-300
+        n, d = self.data.shape
+        if chunk is None:
+            chunk = max(1, _DENSITY_CHUNK_BYTES // (n * 8))
+        norm = np.prod(self.h) * (2 * np.pi) ** (d / 2)
+        out = np.empty(len(x), dtype=np.float64)
+        for s in range(0, len(x), chunk):
+            zx = x[s:s + chunk] / self.h
+            d2 = (np.einsum("md,md->m", zx, zx)[:, None] + self._zd_sq[None, :]
+                  - 2.0 * (zx @ self._zd.T))
+            out[s:s + chunk] = np.exp(-0.5 * np.maximum(d2, 0.0)).sum(axis=1)
+        return out / (n * norm) + 1e-300
 
 
 def inverse_density_weights(pop_cheap: np.ndarray,

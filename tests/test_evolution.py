@@ -58,6 +58,32 @@ def test_solution_selection_honours_constraints():
         assert sol.meets_constraints(s.cfg.det_min, s.cfg.fa_max)
 
 
+def test_soa_state_is_self_consistent():
+    """The resident arrays must agree with what a fresh recompute (cheap
+    objectives, phenotype hashes) and the object view say."""
+    calls = []
+    s = make_search(calls)
+    state = s.init_state()
+    for _ in range(2):
+        state = s.step(state)
+    pop = state.pop
+    np.testing.assert_array_equal(
+        pop.cheap, s.backend.evaluate_batch(pop.enc, space=s.space))
+    assert list(pop.phash) == pop.enc.batch_phenotype_hash(s.space)
+    assert len(set(pop.phash)) == len(pop)  # dedup invariant
+    # object view mirrors the arrays
+    for i, c in enumerate(state.population):
+        assert c.phash == pop.phash[i]
+        np.testing.assert_array_equal(c.cheap, pop.cheap[i])
+        if c.expensive is None:
+            assert not pop.trained_mask[i]
+        else:
+            np.testing.assert_array_equal(c.expensive, pop.expensive[i])
+    # trained members are all in the dormant-gene cache
+    for h in pop.phash[pop.trained_mask]:
+        assert h in state.evaluated_hashes
+
+
 def test_kde_weights_prefer_sparse_regions():
     # dense cluster at origin + one isolated point: the isolated point must
     # receive the largest parent-sampling weight

@@ -1,0 +1,184 @@
+"""Vectorized genetic operators vs. their scalar references.
+
+The batch operators consume the RNG in a different order than the scalar
+loops, so outputs cannot match element-wise; instead we check (a) exact
+semantic invariants (validity, forced phenotype change, fallback-to-parent)
+and (b) seeded-RNG *distribution* equivalence: summary statistics of many
+scalar draws must match the batch operator's within sampling tolerance.
+"""
+import numpy as np
+import pytest
+
+from repro.core.genome import (
+    Genome,
+    PopulationEncoding,
+    crossover,
+    crossover_batch,
+    is_valid_batch,
+    mutate,
+    mutate_batch,
+    random_genome,
+    random_population,
+)
+from repro.core.search_space import DEFAULT_SPACE
+
+SP = DEFAULT_SPACE
+FIELDS = ("op", "conn", "out", "w_bits", "a_bits", "i_bits", "dec")
+
+
+def _tile(g: Genome, n: int) -> PopulationEncoding:
+    return PopulationEncoding.from_genomes([g] * n)
+
+
+def _rows_equal(a: PopulationEncoding, b: PopulationEncoding) -> np.ndarray:
+    """(N,) bool — rows whose genes are identical in both encodings."""
+    eq = np.ones(len(a), dtype=bool)
+    for f in FIELDS:
+        av, bv = getattr(a, f), getattr(b, f)
+        eq &= (av == bv).all(axis=1) if av.ndim == 2 else av == bv
+    return eq
+
+
+def _tv(a_samples, b_samples, lo, hi) -> float:
+    """Total-variation distance between two empirical distributions."""
+    bins = np.arange(lo, hi + 2)
+    pa = np.histogram(a_samples, bins=bins)[0] / len(a_samples)
+    pb = np.histogram(b_samples, bins=bins)[0] / len(b_samples)
+    return 0.5 * float(np.abs(pa - pb).sum())
+
+
+# ---------------------------------------------------------------- validity
+
+def test_is_valid_batch_matches_scalar_on_unfiltered_encodings():
+    rng = np.random.default_rng(0)
+    d, n = SP.max_depth, 600
+    enc = PopulationEncoding(
+        op=rng.integers(0, SP.n_ops, (n, d)),
+        conn=rng.integers(0, np.arange(1, d + 1), (n, d)),
+        out=rng.integers(1, d + 1, n),
+        w_bits=rng.integers(0, len(SP.weight_bits), n),
+        a_bits=rng.integers(0, len(SP.act_bits), n),
+        i_bits=rng.integers(0, len(SP.input_bits), n),
+        dec=rng.integers(0, len(SP.input_decimations), n))
+    batch = is_valid_batch(enc, SP)
+    scalar = np.asarray([enc.genome(i).is_valid(SP) for i in range(n)])
+    np.testing.assert_array_equal(batch, scalar)
+    assert 0.0 < batch.mean() < 1.0  # the sample covers both outcomes
+
+
+def test_random_population_all_valid_and_sized():
+    pop = random_population(np.random.default_rng(1), 300, SP)
+    assert len(pop) == 300
+    assert is_valid_batch(pop, SP).all()
+
+
+def test_random_population_depth_distribution_matches_scalar():
+    k = 1000
+    scalar_rng = np.random.default_rng(2)
+    scalar_depth = [random_genome(scalar_rng, SP).depth() for _ in range(k)]
+    pop = random_population(np.random.default_rng(3), k, SP)
+    _, batch_depth = pop.decode_paths()
+    assert _tv(scalar_depth, batch_depth, 1, SP.max_depth) < 0.1
+
+
+# ---------------------------------------------------------------- mutation
+
+def test_mutate_batch_outputs_valid_and_forced_change():
+    rng = np.random.default_rng(4)
+    pop = random_population(rng, 200, SP)
+    mut = mutate_batch(pop, rng, SP, force_active_change=True)
+    assert is_valid_batch(mut, SP).all()
+    same = _rows_equal(pop, mut)
+    ph_pop = np.asarray(pop.batch_phenotype_hash(SP), dtype=object)
+    ph_mut = np.asarray(mut.batch_phenotype_hash(SP), dtype=object)
+    # mutated rows changed phenotype; fallback rows are the parent verbatim
+    assert (ph_pop[~same] != ph_mut[~same]).all()
+    assert (ph_pop[same] == ph_mut[same]).all()
+    assert (~same).mean() > 0.95  # fallback is the rare path
+
+
+def test_mutate_batch_relaxed_allows_neutral_drift():
+    rng = np.random.default_rng(5)
+    pop = random_population(rng, 400, SP)
+    mut = mutate_batch(pop, rng, SP, rate=0.02, force_active_change=False)
+    assert is_valid_batch(mut, SP).all()
+    ph_pop = pop.batch_phenotype_hash(SP)
+    ph_mut = mut.batch_phenotype_hash(SP)
+    neutral = sum(a == b for a, b in zip(ph_pop, ph_mut))
+    assert neutral > 0  # low rate: some draws touch nothing / dormant genes
+
+
+def test_mutate_batch_distribution_matches_scalar():
+    k = 3000
+    parent = random_genome(np.random.default_rng(6), SP)
+    parent_op = np.asarray(parent.op_genes)
+
+    scalar_rng = np.random.default_rng(7)
+    s_out, s_depth, s_nop, s_dec = [], [], [], []
+    for _ in range(k):
+        m = mutate(parent, scalar_rng, SP, force_active_change=True)
+        s_out.append(m.out_gene)
+        s_depth.append(m.depth())
+        s_nop.append(int((np.asarray(m.op_genes) != parent_op).sum()))
+        s_dec.append(m.dec_gene)
+
+    batch = mutate_batch(_tile(parent, k), np.random.default_rng(8), SP,
+                         force_active_change=True)
+    _, b_depth = batch.decode_paths()
+    b_nop = (batch.op != parent_op[None, :]).sum(axis=1)
+
+    assert _tv(s_out, batch.out, 1, SP.max_depth) < 0.1
+    assert _tv(s_depth, b_depth, 1, SP.max_depth) < 0.1
+    assert _tv(s_nop, b_nop, 0, SP.max_depth) < 0.1
+    assert abs(np.mean(s_dec) - batch.dec.mean()) < 0.05
+    assert abs(np.mean(s_nop) - b_nop.mean()) < 0.25
+
+
+# --------------------------------------------------------------- crossover
+
+def _distinct_parents():
+    rng = np.random.default_rng(9)
+    while True:
+        a = random_genome(rng, SP)
+        b = random_genome(rng, SP)
+        distinct = (np.asarray(a.op_genes) != np.asarray(b.op_genes))
+        if a.dec_gene != b.dec_gene and distinct.sum() >= 10:
+            return a, b, distinct
+
+
+def test_crossover_batch_outputs_valid():
+    rng = np.random.default_rng(10)
+    a = random_population(rng, 200, SP)
+    b = a.take(rng.permutation(200))
+    c = crossover_batch(a, b, rng, SP)
+    assert is_valid_batch(c, SP).all()
+
+
+def test_crossover_batch_distribution_matches_scalar():
+    k = 3000
+    a, b, distinct = _distinct_parents()
+    b_op = np.asarray(b.op_genes)
+
+    scalar_rng = np.random.default_rng(11)
+    s_children = [crossover(a, b, scalar_rng, SP) for _ in range(k)]
+    s_from_b = np.asarray([np.asarray(c.op_genes) == b_op
+                           for c in s_children]).mean(axis=0)
+    s_dec_b = np.mean([c.dec_gene == b.dec_gene for c in s_children])
+
+    batch = crossover_batch(_tile(a, k), _tile(b, k),
+                            np.random.default_rng(12), SP)
+    b_from_b = (batch.op == b_op[None, :]).mean(axis=0)
+    b_dec_b = (batch.dec == b.dec_gene).mean()
+
+    # single-point cut: P(op gene comes from b) rises with position; the
+    # scalar and batch cut distributions must agree per position
+    assert np.abs(s_from_b[distinct] - b_from_b[distinct]).max() < 0.1
+    # fair-coin donor for the non-node genes (modulated by rejection)
+    assert abs(s_dec_b - b_dec_b) < 0.05
+
+
+def test_crossover_batch_requires_aligned_shapes():
+    rng = np.random.default_rng(13)
+    pop = random_population(rng, 8, SP)
+    with pytest.raises(Exception):
+        crossover_batch(pop, pop.take([0, 1]), rng, SP)

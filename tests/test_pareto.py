@@ -12,6 +12,7 @@ from repro.core.pareto import (
     environmental_selection,
     hypervolume_2d,
     non_dominated_sort,
+    non_dominated_sort_reference,
     pareto_front,
 )
 
@@ -48,6 +49,18 @@ def test_environmental_selection_capacity_and_front0(pts, cap):
     f0 = pareto_front(pts)
     if len(f0) <= cap:
         assert set(f0.tolist()) <= set(keep.tolist())
+
+
+@given(points_st)
+@settings(max_examples=60, deadline=None)
+def test_vectorized_sort_matches_reference(pts):
+    """The domination-matrix sort must reproduce the Deb reference exactly —
+    same fronts, same ascending index order within each front."""
+    ref = non_dominated_sort_reference(pts)
+    vec = non_dominated_sort(pts)
+    assert len(ref) == len(vec)
+    for a, b in zip(ref, vec):
+        np.testing.assert_array_equal(a, b)
 
 
 def test_crowding_boundary_infinite():

@@ -1,0 +1,63 @@
+"""Seeded parity suite for the vectorized non-dominated sort.
+
+Complements the hypothesis property test in test_pareto.py (which skips when
+hypothesis is unavailable) with deterministic coverage that always runs:
+random clouds, duplicated rows, degenerate columns, and many-front chains.
+"""
+import numpy as np
+import pytest
+
+from repro.core.pareto import (
+    domination_matrix,
+    dominates,
+    non_dominated_sort,
+    non_dominated_sort_reference,
+)
+
+
+def _assert_same_fronts(pts):
+    ref = non_dominated_sort_reference(pts)
+    vec = non_dominated_sort(pts)
+    assert len(ref) == len(vec)
+    for a, b in zip(ref, vec):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("m", [1, 2, 3, 9])
+def test_random_clouds_match_reference(seed, m):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(rng.integers(1, 60), m))
+    _assert_same_fronts(pts)
+
+
+def test_duplicates_and_degenerate_columns():
+    rng = np.random.default_rng(99)
+    pts = rng.integers(0, 3, size=(50, 4)).astype(np.float64)  # many ties
+    pts[:, 2] = 7.0  # constant objective
+    pts[10:20] = pts[:10]  # exact duplicate rows
+    _assert_same_fronts(pts)
+
+
+def test_total_order_chain_yields_singleton_fronts():
+    # strictly improving chain: every point is its own front
+    pts = np.arange(30, dtype=np.float64)[:, None].repeat(3, axis=1)
+    fronts = non_dominated_sort(pts)
+    assert len(fronts) == 30
+    assert all(len(f) == 1 for f in fronts)
+    _assert_same_fronts(pts)
+
+
+def test_empty_and_single():
+    assert non_dominated_sort(np.zeros((0, 3))) == []
+    fronts = non_dominated_sort(np.asarray([[1.0, 2.0]]))
+    assert len(fronts) == 1 and fronts[0].tolist() == [0]
+
+
+def test_domination_matrix_chunking_and_semantics():
+    rng = np.random.default_rng(7)
+    pts = rng.normal(size=(33, 5))
+    dom = domination_matrix(pts, row_chunk=8)  # chunk smaller than n
+    for i in range(len(pts)):
+        for j in range(len(pts)):
+            assert dom[i, j] == dominates(pts[i], pts[j])

@@ -1,0 +1,88 @@
+"""Selection machinery degenerate cases + density chunking equivalence."""
+import numpy as np
+
+from repro.core.selection import (
+    GaussianKDE,
+    inverse_density_weights,
+    preselect_children,
+    sample_parents,
+)
+
+
+# ------------------------------------------------------------ KDE basics
+
+def test_density_chunking_is_equivalent():
+    # chunk size must not change results (up to BLAS shape-dependent
+    # rounding in the distance GEMM)
+    rng = np.random.default_rng(0)
+    kde = GaussianKDE(rng.normal(size=(40, 5)))
+    q = rng.normal(size=(37, 5))
+    full = kde.density(q, chunk=10**9)
+    np.testing.assert_allclose(kde.density(q, chunk=1), full, rtol=1e-12)
+    np.testing.assert_allclose(kde.density(q, chunk=7), full, rtol=1e-12)
+    np.testing.assert_allclose(kde.density(q), full, rtol=1e-12)
+
+
+def test_density_matches_naive_broadcast_reference():
+    rng = np.random.default_rng(4)
+    data = rng.normal(size=(25, 3))
+    q = rng.normal(size=(11, 3))
+    kde = GaussianKDE(data)
+    z = (q[:, None, :] - data[None, :, :]) / kde.h[None, None, :]
+    ref = np.exp(-0.5 * np.sum(z * z, axis=-1)).sum(axis=1) \
+        / (len(data) * np.prod(kde.h) * (2 * np.pi) ** 1.5) + 1e-300
+    np.testing.assert_allclose(kde.density(q), ref, rtol=1e-9)
+
+
+def test_density_auto_chunk_bounded_at_large_population():
+    # pop 10k+: the (m, n, d) broadcast must not materialize at full m
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(12_000, 7))
+    kde = GaussianKDE(data)
+    d = kde.density(data[:3000])
+    assert d.shape == (3000,) and np.isfinite(d).all() and (d > 0).all()
+
+
+# ----------------------------------------------------- degenerate inputs
+
+def test_identical_point_population_gives_uniform_weights():
+    # zero variance trips the KDE sigma floor; every point has the same
+    # density, so inverse-density weights must come out uniform
+    pts = np.full((8, 3), 4.2)
+    w = inverse_density_weights(pts)
+    np.testing.assert_allclose(w, np.full(8, 1 / 8))
+    idx = sample_parents(np.random.default_rng(0), pts, 5)
+    assert idx.shape == (5,) and (idx >= 0).all() and (idx < 8).all()
+
+
+def test_single_member_population():
+    pts = np.asarray([[1.0, 2.0, 3.0]])
+    w = inverse_density_weights(pts)
+    np.testing.assert_allclose(w, [1.0])
+    idx = sample_parents(np.random.default_rng(0), pts, 3)
+    assert idx.tolist() == [0, 0, 0]
+    kept = preselect_children(np.random.default_rng(0), pts,
+                              np.asarray([[0.5, 0.5, 0.5]]), 4)
+    assert kept.tolist() == [0]
+
+
+def test_preselect_children_with_non_finite_weights():
+    rng = np.random.default_rng(2)
+    pop = rng.normal(size=(10, 3))
+    children = rng.normal(size=(20, 3))
+    children[::2] = np.nan  # NaN queries poison the KDE weights
+    idx = preselect_children(rng, pop, children, 6)
+    assert len(idx) == 6
+    assert len(set(idx.tolist())) == 6
+    assert idx.min() >= 0 and idx.max() < 20
+
+
+def test_preselect_children_with_degenerate_population():
+    # identical-point population + far-away children: the KDE densities
+    # underflow but the guard must still return a valid unique index set
+    rng = np.random.default_rng(3)
+    pop = np.zeros((6, 4))
+    children = rng.normal(loc=1e6, size=(15, 4))
+    idx = preselect_children(rng, pop, children, 5)
+    assert len(idx) == 5 and len(set(idx.tolist())) == 5
+    assert idx.min() >= 0 and idx.max() < 15
