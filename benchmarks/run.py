@@ -28,6 +28,7 @@ def main() -> None:
         nas_loop_bench,
         population_eval_bench,
         roofline_table,
+        train_bench,
     )
     rows += kernel_bench.run(log=lambda *a: print(*a, file=sys.stderr))
     rows += population_eval_bench.run(
@@ -38,6 +39,12 @@ def main() -> None:
     if args.json:
         nas_loop_bench.write_json(nas_loop_rows, "BENCH_nas_loop.json")
         print("# wrote BENCH_nas_loop.json", file=sys.stderr)
+    train_loop_rows = train_bench.run(
+        log=lambda *a: print(*a, file=sys.stderr), smoke=not args.full)
+    rows += train_loop_rows
+    if args.json:
+        train_bench.write_json(train_loop_rows, "BENCH_train_loop.json")
+        print("# wrote BENCH_train_loop.json", file=sys.stderr)
     rows += roofline_table.run(log=lambda *a: print(*a, file=sys.stderr))
     roofline_table.write_markdown(log=lambda *a: print(*a, file=sys.stderr))
 

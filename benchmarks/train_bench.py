@@ -1,0 +1,143 @@
+"""Expensive-path throughput: bucketed vmap-stacked candidate training vs
+the scalar per-candidate loop (DESIGN.md §9).
+
+All children share one shape signature (same topology, per-candidate seeds
+and quantization bit widths), so the batched side trains the whole
+generation in a single vmapped `lax.scan` dispatch while the scalar side
+pays per-step dispatch overhead per candidate.  Timings are steady-state:
+both sides are warmed first (the signature compile cache amortizes across
+generations in the real search).  Seeded parity between the batched and
+scalar `TrainResult`s is asserted at the smallest size before anything is
+timed — the speedup only counts if the numbers are the same numbers.
+
+Acceptance target: >= 5x candidates/sec at 32 children (CPU smoke run).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.genome import Genome
+from repro.core.search_space import SearchSpace
+from repro.core.trainer import train_candidate
+from repro.core.trainer_batch import train_candidates_batched
+
+# the scalar side re-jits per candidate (~2s each), so the 128-child point
+# runs only in --full; the acceptance criterion (>= 5x at 32) is in smoke
+SIZES_SMOKE, SIZES_FULL = (8, 32), (8, 32, 128)
+SMOKE_STEPS, FULL_STEPS = 16, 100
+BATCH = 32
+N_TR, N_VA = 192, 96
+PARITY_SIZE = 8
+
+# coarse decimation keeps candidate inputs short (60000/240 = 250 samples)
+SPACE = SearchSpace(input_decimations=(240,))
+
+
+def _shared_signature_children(n: int) -> List[Genome]:
+    """``n`` children of one topology: distinct seeds do the differing; the
+    quant genes cycle through all 8 precision combos (stacked as data, so
+    the bucket stays whole)."""
+    d = SPACE.max_depth
+    # chain: conv c8 k3 s2 -> conv c4 k5 s4 (op table ids 28 and 20)
+    op = (28, 20) + (0,) * (d - 2)
+    conn = tuple(range(d))
+    return [Genome(op_genes=op, conn_genes=conn, out_gene=2,
+                   w_bits_gene=(i >> 2) & 1, a_bits_gene=(i >> 1) & 1,
+                   i_bits_gene=i & 1, dec_gene=0) for i in range(n)]
+
+
+def _dataset(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x_tr = rng.normal(size=(N_TR, 250, 2)).astype(np.float32)
+    x_va = rng.normal(size=(N_VA, 250, 2)).astype(np.float32)
+    y_tr = (np.arange(N_TR) % 2).astype(np.int32)
+    y_va = (np.arange(N_VA) % 2).astype(np.int32)
+    return (x_tr, y_tr), (x_va, y_va)
+
+
+def run(log=print, smoke: bool = True) -> List[Dict]:
+    steps = SMOKE_STEPS if smoke else FULL_STEPS
+    sizes = SIZES_SMOKE if smoke else SIZES_FULL
+    tr, va = _dataset()
+    kw = dict(space=SPACE, steps=steps, batch_size=BATCH, lr=3e-3)
+
+    def scalar(children):
+        return [train_candidate(g, tr, va, seed=i, **kw)
+                for i, g in enumerate(children)]
+
+    def batched(children):
+        return train_candidates_batched(children, tr, va,
+                                        seeds=list(range(len(children))),
+                                        **kw)
+
+    # ---- seeded parity gate (smallest size, also warms the scalar jit)
+    children = _shared_signature_children(PARITY_SIZE)
+    res_s, res_b = scalar(children), batched(children)
+    for k, (s, b) in enumerate(zip(res_s, res_b)):
+        assert (s.detection_rate, s.false_alarm_rate) == \
+            (b.detection_rate, b.false_alarm_rate), \
+            f"parity: candidate {k} objectives diverged ({s} vs {b})"
+        assert abs(s.val_loss - b.val_loss) < 5e-3, \
+            f"parity: candidate {k} val_loss diverged ({s} vs {b})"
+    log(f"[train_loop] parity ok at n={PARITY_SIZE} "
+        f"(det/fa identical, max |dnll|="
+        f"{max(abs(s.val_loss - b.val_loss) for s, b in zip(res_s, res_b)):.1e})")
+
+    rows: List[Dict] = []
+    for n in sizes:
+        children = _shared_signature_children(n)
+        batched(children)  # warm the vmapped compile at this bucket size
+        t0 = time.perf_counter()
+        batched(children)
+        t_batched = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        scalar(children)
+        t_scalar = time.perf_counter() - t0
+        cps_b, cps_s = n / t_batched, n / t_scalar
+        speedup = t_scalar / t_batched
+        log(f"[train_loop] n={n}: batched {cps_b:.1f} cand/s, "
+            f"scalar {cps_s:.1f} cand/s, speedup {speedup:.1f}x "
+            f"({steps} steps)")
+        rows.append({"name": f"train_loop_batched_{n}",
+                     "us_per_call": t_batched * 1e6 / n,
+                     "derived": f"cands_per_sec={cps_b:.2f} "
+                                f"speedup={speedup:.1f}x steps={steps}"})
+        rows.append({"name": f"train_loop_scalar_{n}",
+                     "us_per_call": t_scalar * 1e6 / n,
+                     "derived": f"cands_per_sec={cps_s:.2f} steps={steps}"})
+    return rows
+
+
+def write_json(rows: List[Dict], path: str) -> None:
+    """The machine-readable result format (single writer — run.py and the
+    CLI below both route through this)."""
+    with open(path, "w") as f:
+        json.dump({"bench": "train_loop", "rows": rows}, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help=f"{FULL_STEPS} train steps (default: smoke, "
+                         f"{SMOKE_STEPS})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="explicit smoke mode (the default; kept for CI "
+                         "command-line clarity)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write rows as machine-readable JSON")
+    args = ap.parse_args()
+    rows = run(smoke=not args.full)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    if args.json:
+        write_json(rows, args.json)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

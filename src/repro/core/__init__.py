@@ -18,3 +18,8 @@ from repro.core.hw_model import (  # noqa: F401
     roofline,
 )
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace  # noqa: F401
+from repro.core.trainer_batch import (  # noqa: F401
+    bucket_by_signature,
+    shape_signature,
+    train_candidates_batched,
+)

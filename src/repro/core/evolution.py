@@ -50,9 +50,13 @@ from repro.core.pareto import (
     environmental_selection,
     pareto_front,
 )
-from repro.core.scheduler import DynamicScheduler
+from repro.core.scheduler import DynamicScheduler, JobResult
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
 from repro.core.trainer import TrainResult, train_candidate
+from repro.core.trainer_batch import (
+    bucket_by_signature,
+    train_candidates_batched,
+)
 
 
 @dataclasses.dataclass
@@ -73,6 +77,7 @@ class NASConfig:
     backend: Optional[BackendSpec] = None  # cost backend; default = profile
     det_min: float = 0.90          # paper's hard acceptance limits
     fa_max: float = 0.20
+    batch_training: bool = True    # bucketed vmap-stacked training (§9)
 
 
 @dataclasses.dataclass
@@ -100,6 +105,8 @@ class EvolutionarySearch:
                  data_train, data_val,
                  space: SearchSpace = DEFAULT_SPACE,
                  train_fn: Optional[Callable[[Genome], TrainResult]] = None,
+                 batch_train_fn: Optional[
+                     Callable[[List[Genome]], List[TrainResult]]] = None,
                  log: Callable[[str], None] = print):
         self.cfg = config
         self.space = space
@@ -111,6 +118,18 @@ class EvolutionarySearch:
             g, data_train, data_val, space=self.space,
             steps=config.train_steps, batch_size=config.train_batch,
             lr=config.lr, seed=config.seed))
+        # bucketed vmap-stacked training (DESIGN.md §9): the default unless
+        # a scalar train_fn is injected (tests) or the config opts out.
+        if batch_train_fn is not None:
+            self._batch_train_fn = batch_train_fn
+        elif train_fn is None and config.batch_training:
+            stage_cache: Dict[int, tuple] = {}  # device dataset, per search
+            self._batch_train_fn = lambda gs: train_candidates_batched(
+                gs, data_train, data_val, space=self.space,
+                steps=config.train_steps, batch_size=config.train_batch,
+                lr=config.lr, seed=config.seed, stage_cache=stage_cache)
+        else:
+            self._batch_train_fn = None
         self.scheduler = DynamicScheduler(n_workers=config.n_workers,
                                           max_retries=2, timeout_s=1800.0)
 
@@ -195,6 +214,41 @@ class EvolutionarySearch:
         return self._score(children.take(keep), kept_hashes,
                            generation=state.generation + 1)
 
+    def _run_scheduled(self, jobs) -> List[JobResult]:
+        """scheduler.run with per-job alignment: the scheduler may return
+        partial results (every worker died), so match by job_id and mark
+        the gaps failed instead of mispairing zip order."""
+        by_id = {r.job_id: r for r in self.scheduler.run(jobs)}
+        return [by_id.get(i, JobResult(job_id=i, ok=False,
+                                       error="no result (workers died)"))
+                for i in range(len(jobs))]
+
+    def _run_training_jobs(self, genomes: List[Genome]) -> List[JobResult]:
+        """Dispatch training through the scheduler, one job per signature
+        bucket when batched training is on (retry/speculation then operate
+        on buckets — a failed bucket re-dispatches whole), else one job per
+        candidate.  Returns per-candidate results in input order."""
+        if self._batch_train_fn is None:
+            return self._run_scheduled(
+                [(lambda g=g: self._train_fn(g)) for g in genomes])
+        buckets = list(bucket_by_signature(genomes, self.space).values())
+        bucket_results = self._run_scheduled(
+            [(lambda rows=rows: self._batch_train_fn(
+                [genomes[j] for j in rows])) for rows in buckets])
+        out: List[Optional[JobResult]] = [None] * len(genomes)
+        for rows, br in zip(buckets, bucket_results):
+            ok = bool(br.ok and br.value is not None
+                      and len(br.value) == len(rows))
+            error = br.error if not br.ok else (
+                "" if ok else "batch trainer returned misaligned results")
+            for k, j in enumerate(rows):
+                out[j] = JobResult(
+                    job_id=j, ok=ok,
+                    value=br.value[k] if ok else None,
+                    error=error, attempts=br.attempts,
+                    elapsed_s=br.elapsed_s, worker=br.worker)
+        return out  # type: ignore[return-value]
+
     def _train_members(self, state: NASState, pop: PopulationArrays,
                        idx: np.ndarray) -> None:
         """Expensive-evaluate rows ``idx`` of ``pop`` (cache-first), writing
@@ -210,8 +264,7 @@ class EvolutionarySearch:
         if not todo:
             return
         genomes = [pop.enc.genome(i) for i in todo]
-        jobs = [(lambda g=g: self._train_fn(g)) for g in genomes]
-        results = self.scheduler.run(jobs)
+        results = self._run_training_jobs(genomes)
         for i, r in zip(todo, results):
             if r.ok:
                 exp = expensive_objectives(r.value)

@@ -10,20 +10,35 @@ scheduler adds the failure semantics required at 1000-node scale
 
 * **re-dispatch on failure** — a job whose worker raised (or timed out) is
   retried up to ``max_retries`` times;
-* **straggler mitigation** — when the queue drains, the slowest
-  still-running jobs are speculatively duplicated (first result wins);
+* **straggler mitigation** — the slowest still-running jobs are
+  speculatively duplicated (first result wins);
 * **heartbeat** — jobs report liveness via a timestamp the scheduler
   inspects; silent workers past ``timeout_s`` are declared dead.
+
+A *job* is any independent unit of work — the NAS dispatches whole
+signature buckets (one bucket = one vmap-stacked training, DESIGN.md §9),
+so retry and speculation operate on buckets, exactly as they previously
+operated on single candidates.
+
+Everything is event-driven: workers block on a condition variable (no
+dequeue polling), and the straggler watcher sleeps until the earliest
+moment a running job can exceed ``timeout_s`` — or until any state change
+wakes it.  Speculation stays gated on "no unfinished job is waiting for a
+worker", but that backlog test and the per-job queued/inflight/started-at
+state are now read under the same lock the workers write them under — a
+worker dequeuing concurrently can no longer fabricate the transient
+non-empty-queue observations that the old ``qsize() > 0`` early-continue
+used to skip (and thereby postpone) speculation on.
 """
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 import time
 import traceback
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
 
 @dataclasses.dataclass
@@ -51,36 +66,40 @@ class DynamicScheduler:
             on_result: Optional[Callable[[JobResult], None]] = None
             ) -> List[JobResult]:
         n = len(jobs)
+        if n == 0:
+            return []
         results: Dict[int, JobResult] = {}
-        lock = threading.Lock()
+        cond = threading.Condition()
         attempts: Dict[int, int] = {i: 0 for i in range(n)}
         started_at: Dict[int, float] = {}
-        inflight: Dict[int, int] = {}  # job_id -> live attempt count
-        work: "queue.Queue[int]" = queue.Queue()
-        for i in range(n):
-            work.put(i)
+        inflight: Dict[int, int] = {}   # job_id -> live attempt count
+        pending: Deque[int] = deque(range(n))  # dispatchable job ids
 
-        done_event = threading.Event()
+        alive = [0]  # live worker count; 0 with results missing => give up
 
         def worker(widx: int):
-            while not done_event.is_set():
-                try:
-                    jid = work.get(timeout=0.05)
-                except queue.Empty:
-                    # stay alive: the straggler watcher may enqueue
-                    # speculative twins for jobs still in flight
-                    with lock:
-                        if len(results) == n:
-                            done_event.set()
-                            return
-                    continue
-                with lock:
-                    if jid in results:  # speculative twin already finished
+            try:
+                _worker_loop(widx)
+            finally:
+                with cond:
+                    alive[0] -= 1
+                    cond.notify_all()
+
+        def _worker_loop(widx: int):
+            while True:
+                with cond:
+                    while not pending and len(results) < n:
+                        cond.wait()
+                    if len(results) == n:
+                        return
+                    jid = pending.popleft()
+                    if jid in results:  # stale twin of a finished job
                         continue
                     attempts[jid] += 1
                     att = attempts[jid]
                     inflight[jid] = inflight.get(jid, 0) + 1
                     started_at[jid] = time.monotonic()
+                    cond.notify_all()  # job left the queue: watcher re-arms
                 t0 = time.monotonic()
                 try:
                     value = jobs[jid]()
@@ -92,9 +111,10 @@ class DynamicScheduler:
                                     attempts=att,
                                     elapsed_s=time.monotonic() - t0,
                                     worker=widx)
-                with lock:
+                with cond:
                     inflight[jid] -= 1
                     if jid in results and results[jid].ok:
+                        cond.notify_all()
                         continue  # lost the speculation race
                     if res.ok:
                         results[jid] = res
@@ -102,31 +122,47 @@ class DynamicScheduler:
                             on_result(res)
                     else:
                         if att <= self.max_retries:
-                            work.put(jid)  # re-dispatch
+                            pending.append(jid)  # re-dispatch
                         else:
                             results[jid] = res
                             if on_result:
                                 on_result(res)
+                    cond.notify_all()
 
         with ThreadPoolExecutor(self.n_workers) as pool:
-            futs = [pool.submit(worker, w) for w in range(self.n_workers)]
-            # straggler watch: when the queue is empty but jobs are missing,
-            # duplicate the longest-running ones so a hung worker cannot
-            # stall the generation.
-            while any(not f.done() for f in futs):
-                time.sleep(0.05)
-                if not self.speculate:
-                    continue
-                with lock:
-                    if work.qsize() > 0:
-                        continue
-                    missing = [i for i in range(n) if i not in results]
-                    now = time.monotonic()
-                    for jid in missing:
-                        run_s = now - started_at.get(jid, now)
-                        if (inflight.get(jid, 0) == 1
-                                and run_s > self.timeout_s):
-                            attempts[jid] = 0  # reset budget for the twin
-                            work.put(jid)
+            alive[0] = self.n_workers
+            for w in range(self.n_workers):
+                pool.submit(worker, w)
+            # straggler watch: once no unfinished job is waiting for a
+            # worker, a job past timeout_s with a single live attempt gets
+            # duplicated — first result wins.  The backlog test and the
+            # per-job state are read under the same lock the workers write
+            # them under, so a concurrent dequeue can no longer produce the
+            # transient queue states that used to postpone speculation.
+            # If every worker died (e.g. an on_result callback raised), stop
+            # waiting and return the partial results, like the old
+            # futures-done loop did — never deadlock on a missing notify.
+            with cond:
+                while len(results) < n and alive[0] > 0:
+                    wait_s: Optional[float] = None
+                    backlog = any(jid not in results for jid in pending)
+                    if self.speculate and not backlog:
+                        now = time.monotonic()
+                        for jid in range(n):
+                            if jid in results or jid in pending:
+                                continue
+                            if inflight.get(jid, 0) != 1:
+                                continue
+                            run_s = now - started_at.get(jid, now)
+                            if run_s > self.timeout_s:
+                                attempts[jid] = 0  # fresh budget for the twin
+                                pending.append(jid)
+                                cond.notify_all()
+                            else:
+                                rest = self.timeout_s - run_s
+                                wait_s = rest if wait_s is None \
+                                    else min(wait_s, rest)
+                    cond.wait(timeout=wait_s)
+                cond.notify_all()  # release workers parked on the queue
         # deterministic order
         return [results[i] for i in sorted(results)]

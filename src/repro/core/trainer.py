@@ -9,7 +9,6 @@ quantized model that will be deployed.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
@@ -18,7 +17,7 @@ import numpy as np
 
 from repro.core.genome import Genome
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
-from repro.hwlib.layers import LayerSpec, apply_layer, init_layer, out_shape
+from repro.hwlib.layers import LayerSpec, apply_layer, init_layer
 from repro.hwlib.quant import QuantConfig, fake_quant, quantize_layer_params
 from repro.optim import adamw, apply_updates, clip_by_global_norm
 
@@ -63,6 +62,33 @@ def forward(params: Sequence[Dict[str, Any]], specs: Sequence[LayerSpec],
     return h
 
 
+def refresh_bn_pure(params: List[Dict[str, Any]],
+                    specs: Sequence[LayerSpec], x: jnp.ndarray,
+                    quant: QuantConfig | None = None) -> List[Dict[str, Any]]:
+    """Traceable body of :func:`refresh_bn_stats` (no jit at this level, so
+    the batched trainer can vmap it over a stacked candidate bucket)."""
+    new_params = []
+    h = x
+    if quant is not None:
+        h = fake_quant(h, quant.input_bits)
+    for p, s in zip(params, specs):
+        q = quantize_layer_params(p, s, quant) if quant is not None else p
+        if s.kind == "dwsep_conv" and "bn_scale" in p:
+            from repro.hwlib.layers import _depthwise_conv1d
+            pre = jnp.einsum(
+                "blc,cd->bld",
+                _depthwise_conv1d(h, q["dw"], s.stride), q["pw"]) + q["b"]
+            p = dict(p)
+            p["bn_mean"] = jnp.mean(pre, axis=(0, 1))
+            p["bn_var"] = jnp.var(pre, axis=(0, 1))
+        new_params.append(p)
+        q2 = dict(quantize_layer_params(p, s, quant)) if quant is not None else p
+        h = apply_layer(q2, s, h, train=False)
+        if quant is not None and s.kind == "dwsep_conv":
+            h = fake_quant(h, quant.act_bits)
+    return new_params
+
+
 def refresh_bn_stats(params: List[Dict[str, Any]],
                      specs: Sequence[LayerSpec], x: jnp.ndarray,
                      quant: QuantConfig | None = None) -> List[Dict[str, Any]]:
@@ -73,26 +99,7 @@ def refresh_bn_stats(params: List[Dict[str, Any]],
 
     @jax.jit
     def _refresh(params, x):
-        new_params = []
-        h = x
-        if quant is not None:
-            h = fake_quant(h, quant.input_bits)
-        for p, s in zip(params, specs):
-            q = quantize_layer_params(p, s, quant) if quant is not None else p
-            if s.kind == "dwsep_conv" and "bn_scale" in p:
-                from repro.hwlib.layers import _depthwise_conv1d
-                pre = jnp.einsum(
-                    "blc,cd->bld",
-                    _depthwise_conv1d(h, q["dw"], s.stride), q["pw"]) + q["b"]
-                p = dict(p)
-                p["bn_mean"] = jnp.mean(pre, axis=(0, 1))
-                p["bn_var"] = jnp.var(pre, axis=(0, 1))
-            new_params.append(p)
-            q2 = dict(quantize_layer_params(p, s, quant)) if quant is not None else p
-            h = apply_layer(q2, s, h, train=False)
-            if quant is not None and s.kind == "dwsep_conv":
-                h = fake_quant(h, quant.act_bits)
-        return new_params
+        return refresh_bn_pure(params, specs, x, quant)
 
     return _refresh(list(params), x)
 
@@ -104,40 +111,87 @@ def _loss_fn(params, specs, quant, x, y):
     return nll
 
 
-def make_train_step(specs: Sequence[LayerSpec], quant: QuantConfig | None,
-                    opt):
+def train_step_pure(params, opt_state, x, y, *, specs, quant, opt):
+    """One SGD step as a traceable function (shared by the scalar per-step
+    jit below and the batched trainer's vmapped ``lax.scan`` body)."""
+    loss, grads = jax.value_and_grad(_loss_fn)(params, specs, quant, x, y)
+    grads, _ = clip_by_global_norm(grads, 1.0)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    params = apply_updates(params, updates)
+    return params, opt_state, loss
+
+
+def make_train_step_indexed(specs: Sequence[LayerSpec],
+                            quant: QuantConfig | None, opt):
+    """Train step that gathers its minibatch on device from the staged
+    dataset (``x_all``/``y_all`` live on device once; ``idx`` is one row of
+    the presampled index matrix) — no per-step host→device batch copies."""
     @jax.jit
-    def step(params, opt_state, x, y):
-        loss, grads = jax.value_and_grad(_loss_fn)(params, specs, quant, x, y)
-        grads, _ = clip_by_global_norm(grads, 1.0)
-        updates, opt_state = opt.update(grads, opt_state, params)
-        params = apply_updates(params, updates)
-        return params, opt_state, loss
+    def step(params, opt_state, x_all, y_all, idx):
+        return train_step_pure(params, opt_state, x_all[idx], y_all[idx],
+                               specs=specs, quant=quant, opt=opt)
 
     return step
 
 
-def evaluate(params, specs, quant, x: np.ndarray, y: np.ndarray,
-             batch: int = 256) -> Tuple[float, float, float]:
-    """(detection_rate, false_alarm_rate, mean_nll) on a dataset."""
-    @jax.jit
-    def fwd(xb):
-        return forward(params, specs, xb, quant, train=False)
+def presample_indices(seed: int, n: int, steps: int, batch_size: int,
+                      calib_size: int = 256
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """The full ``(steps, batch_size)`` minibatch index matrix plus the BN
+    calibration indices, drawn from ``default_rng(seed)`` in the exact
+    stream order of the historical per-step sampling loop (numpy fills a
+    ``(steps, B)`` draw row-major, so one call == ``steps`` successive
+    per-step calls).  Single source of truth for the scalar AND batched
+    training paths — matched seeds therefore train on matched minibatches.
+    """
+    nrng = np.random.default_rng(seed)
+    idx = nrng.integers(0, n, (steps, batch_size))
+    calib = nrng.integers(0, n, min(calib_size, n))
+    return idx, calib
 
-    preds, nll_sum = [], 0.0
-    for i in range(0, len(x), batch):
-        xb = jnp.asarray(x[i:i + batch])
-        logits = fwd(xb)
-        logp = jax.nn.log_softmax(logits)
-        yb = jnp.asarray(y[i:i + batch])
-        nll_sum += float(-jnp.take_along_axis(
-            logp, yb[:, None], axis=1).sum())
-        preds.append(np.asarray(jnp.argmax(logits, axis=-1)))
-    pred = np.concatenate(preds)
+
+def detection_rates(pred: np.ndarray, y: np.ndarray) -> Tuple[float, float]:
+    """(detection_rate, false_alarm_rate) of hard predictions vs labels."""
     pos, neg = y == 1, y == 0
     det = float((pred[pos] == 1).mean()) if pos.any() else 0.0
     fa = float((pred[neg] == 1).mean()) if neg.any() else 1.0
+    return det, fa
+
+
+def evaluate(params, specs, quant, x: np.ndarray, y: np.ndarray,
+             batch: int = 256) -> Tuple[float, float, float]:
+    """(detection_rate, false_alarm_rate, mean_nll) on a dataset.
+
+    NLL sums and argmax predictions accumulate on device; the host sees a
+    single transfer at the end instead of a blocking ``float(...)`` sync per
+    eval batch.
+    """
+    @jax.jit
+    def fwd(xb, yb):
+        logits = forward(params, specs, xb, quant, train=False)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, yb[:, None], axis=1).sum()
+        return nll, jnp.argmax(logits, axis=-1)
+
+    preds, nll_parts = [], []
+    for i in range(0, len(x), batch):
+        nll, pred = fwd(jnp.asarray(x[i:i + batch]),
+                        jnp.asarray(y[i:i + batch]))
+        nll_parts.append(nll)
+        preds.append(pred)
+    pred = np.asarray(jnp.concatenate(preds))
+    nll_sum = float(jnp.sum(jnp.stack(nll_parts)))
+    det, fa = detection_rates(pred, y)
     return det, fa, nll_sum / len(x)
+
+
+def prep_inputs(x: np.ndarray, want_len: int) -> np.ndarray:
+    """Subsample max-resolution records to a genome's input length (the
+    decimation gene): strided view, no copy when already at length."""
+    if x.shape[1] == want_len:
+        return x
+    stride = x.shape[1] // want_len
+    return x[:, : want_len * stride : stride]
 
 
 def train_candidate(
@@ -156,36 +210,36 @@ def train_candidate(
 
     The dataset arrives at max resolution (decimation 16); the genome's
     decimation gene subsamples further if it asks for a shorter input.
+
+    The training set is staged on device once and the whole
+    ``(steps, batch_size)`` minibatch index matrix is presampled up front
+    (:func:`presample_indices` — the identical stream the historical
+    per-step numpy sampling produced), so the step loop gathers minibatches
+    on device instead of paying a numpy gather + host→device copy per step.
     """
     specs = genome.phenotype(space)
     quant = genome.quant(space) if use_quant else None
     want_len = genome.input_length(space)
 
-    def prep(x):
-        if x.shape[1] == want_len:
-            return x
-        stride = x.shape[1] // want_len
-        return x[:, : want_len * stride : stride]
-
-    x_tr, y_tr = prep(data_train[0]), data_train[1]
-    x_va, y_va = prep(data_val[0]), data_val[1]
+    x_tr, y_tr = prep_inputs(data_train[0], want_len), data_train[1]
+    x_va, y_va = prep_inputs(data_val[0], want_len), data_val[1]
 
     rng = jax.random.PRNGKey(seed)
     params = init_candidate(rng, specs)
     opt = adamw(lr, b1=0.9, b2=0.99, weight_decay=1e-4)
     opt_state = opt.init(params)
-    step_fn = make_train_step(specs, quant, opt)
+    step_fn = make_train_step_indexed(specs, quant, opt)
 
-    nrng = np.random.default_rng(seed)
     n = len(x_tr)
+    idx, calib_idx = presample_indices(seed, n, steps, batch_size)
+    x_dev, y_dev = jnp.asarray(x_tr), jnp.asarray(y_tr)
+    idx_dev = jnp.asarray(idx)
     for s in range(steps):
-        idx = nrng.integers(0, n, batch_size)
-        params, opt_state, _ = step_fn(params, opt_state,
-                                       jnp.asarray(x_tr[idx]),
-                                       jnp.asarray(y_tr[idx]))
+        params, opt_state, _ = step_fn(params, opt_state, x_dev, y_dev,
+                                       idx_dev[s])
     # BN re-estimation on a calibration slice before deployment-mode eval
-    calib = jnp.asarray(x_tr[nrng.integers(0, n, min(256, n))])
-    params = refresh_bn_stats(params, specs, calib, quant)
+    params = refresh_bn_stats(params, specs, x_dev[jnp.asarray(calib_idx)],
+                              quant)
     det, fa, nll = evaluate(params, specs, quant, x_va, y_va)
     return TrainResult(detection_rate=det, false_alarm_rate=fa,
                        val_loss=nll, steps=steps)

@@ -53,6 +53,14 @@ class LayerSpec:
             return "gap"
         return f"fc{self.out_channels}"
 
+    def signature(self) -> Tuple:
+        """The static fields that determine this layer's compiled kernel:
+        parameter shapes, slice strides and the BN branch all derive from
+        these, so two layers with equal signatures trace to the same jaxpr
+        (the per-candidate bucketing key of the batched trainer)."""
+        return (self.kind, self.out_channels, self.kernel_size, self.stride,
+                self.use_bn)
+
 
 @dataclasses.dataclass(frozen=True)
 class LayerCost:

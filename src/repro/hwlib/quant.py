@@ -13,6 +13,7 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.hwlib.layers import DWSEP_CONV, LayerSpec
 
@@ -29,15 +30,27 @@ class QuantConfig:
         return f"w{self.weight_bits}a{self.act_bits}i{self.input_bits}"
 
 
-def fake_quant(x: jnp.ndarray, bits: int, *, per_channel_axis: int | None = None
+def fake_quant(x: jnp.ndarray, bits, *, per_channel_axis: int | None = None
                ) -> jnp.ndarray:
     """Symmetric fake quantization with a straight-through estimator.
 
     ``bits <= 0`` or ``bits >= 32`` disables quantization (identity).
+
+    ``bits`` may be a Python int (static — the branch above resolves at
+    trace time) or a traced scalar (the vmap-stacked batched trainer maps
+    over per-candidate bit widths, DESIGN.md §9).  The traced path computes
+    the same f32 values as the static one for the searchable widths and
+    realises the disable rule with ``jnp.where``, so it stays vmap-clean.
     """
-    if bits <= 0 or bits >= 32:
-        return x
-    qmax = 2.0 ** (bits - 1) - 1.0
+    if isinstance(bits, (int, np.integer)):
+        if bits <= 0 or bits >= 32:
+            return x
+        qmax = 2.0 ** (int(bits) - 1) - 1.0
+        disabled = None
+    else:
+        b = jnp.asarray(bits).astype(jnp.float32)
+        qmax = 2.0 ** (b - 1.0) - 1.0
+        disabled = (b <= 0.0) | (b >= 32.0)
     if per_channel_axis is None:
         scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
     else:
@@ -46,7 +59,10 @@ def fake_quant(x: jnp.ndarray, bits: int, *, per_channel_axis: int | None = None
                             1e-8) / qmax
     q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax) * scale
     # straight-through: forward q, backward identity
-    return x + jax.lax.stop_gradient(q - x)
+    out = x + jax.lax.stop_gradient(q - x)
+    if disabled is not None:
+        out = jnp.where(disabled, x, out)
+    return out
 
 
 def quantize_layer_params(params: Dict[str, Any], spec: LayerSpec,

@@ -40,6 +40,47 @@ def test_permanent_failure_reported_not_raised():
     assert results[1].ok and results[1].value == 42
 
 
+def test_speculation_waits_for_backlog_but_rescues_straggler():
+    """Speculation is gated on 'no unfinished job waits for a worker'
+    (checked atomically with the per-job state — the old racy qsize()
+    proxy could postpone twins on transient queue observations).  Under a
+    sustained backlog no worker is wasted on duplicates, yet the straggler
+    still gets its twin once the backlog drains."""
+    twin_ran = threading.Event()
+    runs = {}
+    lock = threading.Lock()
+
+    def straggler():
+        with lock:
+            runs["straggler"] = runs.get("straggler", 0) + 1
+            first = runs["straggler"] == 1
+        if first:
+            twin_ran.wait(timeout=10.0)  # hung until its twin completes
+            return "slow"
+        twin_ran.set()
+        return "fast"
+
+    def sleeper(i):
+        def f():
+            with lock:
+                runs[i] = runs.get(i, 0) + 1
+            time.sleep(0.3)
+            return i
+        return f
+
+    jobs = [straggler] + [sleeper(i) for i in range(6)]
+    sched = DynamicScheduler(n_workers=2, max_retries=0, timeout_s=0.3,
+                             speculate=True)
+    results = sched.run(jobs)
+    # the released original may beat the twin to the result slot — first
+    # result wins, either way the straggler was rescued
+    assert results[0].ok and results[0].value in ("fast", "slow")
+    assert [r.value for r in results[1:]] == list(range(6))
+    # the backlog was never speculated on — only the straggler was
+    assert all(runs[i] == 1 for i in range(6))
+    assert runs["straggler"] == 2
+
+
 def test_straggler_speculation():
     """A hung job is duplicated after timeout_s and the twin's result wins."""
     state = {"first": True}

@@ -1,0 +1,169 @@
+"""Bucketed vmap-stacked training: scalar parity, bucketing, cache, routing.
+
+The parity contract (DESIGN.md §9): under matched seeds, every candidate of
+a mixed-signature population gets *identical* expensive objectives from the
+batched and scalar paths (detection / false-alarm rates are exact; val_loss
+agrees to float32 reassociation noise).
+"""
+import numpy as np
+import pytest
+
+from repro.core.evolution import EvolutionarySearch, NASConfig
+from repro.core.genome import Genome
+from repro.core.objectives import expensive_objectives
+from repro.core.search_space import SearchSpace
+from repro.core.trainer import TrainResult, train_candidate
+from repro.core.trainer_batch import (
+    bucket_by_signature,
+    compile_cache_stats,
+    reset_compile_cache,
+    shape_signature,
+    train_candidates_batched,
+)
+
+# coarse decimation => 250-sample inputs: training stays test-sized
+SPACE = SearchSpace(input_decimations=(240,))
+
+
+def chain_genome(op_ids, quant=(0, 0, 0), dec=0) -> Genome:
+    """A plain-chain genome expressing exactly ``op_ids`` (+ the head)."""
+    d = SPACE.max_depth
+    return Genome(op_genes=tuple(op_ids) + (0,) * (d - len(op_ids)),
+                  conn_genes=tuple(range(d)), out_gene=len(op_ids),
+                  w_bits_gene=quant[0], a_bits_gene=quant[1],
+                  i_bits_gene=quant[2], dec_gene=dec)
+
+
+# op-table ids (op = channels_idx*12 + kernel_idx*3 + stride_idx):
+CONV_C8_K3_S2 = 28
+CONV_C4_K5_S4 = 20
+CONV_C16_K1_S1 = 36
+POOL_S2 = 60
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    x_tr = rng.normal(size=(64, 250, 2)).astype(np.float32)
+    x_va = rng.normal(size=(48, 250, 2)).astype(np.float32)
+    y_tr = (np.arange(64) % 2).astype(np.int32)
+    y_va = (np.arange(48) % 2).astype(np.int32)
+    return (x_tr, y_tr), (x_va, y_va)
+
+
+def mixed_population():
+    """Two signature buckets (3 + 2 members, quant variants inside each)
+    plus a singleton that exercises the scalar fallback."""
+    a = [chain_genome((CONV_C8_K3_S2, CONV_C4_K5_S4), quant=q)
+         for q in ((0, 0, 0), (1, 1, 1), (0, 1, 0))]
+    b = [chain_genome((CONV_C16_K1_S1, POOL_S2), quant=q)
+         for q in ((1, 0, 1), (0, 0, 1))]
+    c = [chain_genome((POOL_S2, CONV_C8_K3_S2))]
+    return a + b + c
+
+
+def test_shape_signature_buckets_quant_variants_together():
+    pop = mixed_population()
+    sigs = [shape_signature(g, SPACE) for g in pop]
+    assert sigs[0] == sigs[1] == sigs[2]      # precision is data, not shape
+    assert sigs[3] == sigs[4]
+    assert len({sigs[0], sigs[3], sigs[5]}) == 3
+    buckets = bucket_by_signature(pop, SPACE)
+    assert sorted(map(len, buckets.values()), reverse=True) == [3, 2, 1]
+    # phenotype hashes all differ (the search would have deduped otherwise)
+    assert len({g.phenotype_hash(SPACE) for g in pop}) == len(pop)
+
+
+def test_batched_matches_scalar_on_mixed_population(data):
+    tr, va = data
+    pop = mixed_population()
+    kw = dict(space=SPACE, steps=12, batch_size=16, lr=3e-3, seed=0)
+    scalar = [train_candidate(g, tr, va, **kw) for g in pop]
+    batched = train_candidates_batched(pop, tr, va, **kw)
+    assert len(batched) == len(pop)
+    for s, b in zip(scalar, batched):
+        # expensive objectives identical (the search sees the same numbers)
+        np.testing.assert_array_equal(expensive_objectives(s),
+                                      expensive_objectives(b))
+        assert b.steps == s.steps
+        assert abs(s.val_loss - b.val_loss) < 5e-3
+
+
+def test_per_candidate_seeds_match_scalar(data):
+    tr, va = data
+    pop = [chain_genome((CONV_C8_K3_S2, CONV_C4_K5_S4), quant=(0, 0, 0)),
+           chain_genome((CONV_C8_K3_S2, CONV_C4_K5_S4), quant=(1, 1, 1))]
+    kw = dict(space=SPACE, steps=10, batch_size=16, lr=3e-3)
+    batched = train_candidates_batched(pop, tr, va, seeds=[3, 4], **kw)
+    for g, s, b in zip(pop, (3, 4), batched):
+        ref = train_candidate(g, tr, va, seed=s, **kw)
+        np.testing.assert_array_equal(expensive_objectives(ref),
+                                      expensive_objectives(b))
+
+
+def test_compile_cache_hits_across_generations(data):
+    tr, va = data
+    pop = mixed_population()
+    kw = dict(space=SPACE, steps=2, batch_size=8, lr=3e-3, seed=0)
+    reset_compile_cache()
+    train_candidates_batched(pop, tr, va, **kw)
+    stats = compile_cache_stats()
+    # one compiled pair per multi-candidate bucket; the singleton goes scalar
+    assert stats == {"hits": 0, "misses": 2, "size": 2}
+    train_candidates_batched(pop, tr, va, **kw)  # "next generation"
+    stats = compile_cache_stats()
+    assert stats["hits"] == 2 and stats["misses"] == 2 and stats["size"] == 2
+
+
+def test_seeds_must_align():
+    with pytest.raises(ValueError):
+        train_candidates_batched(mixed_population(), None, None,
+                                 space=SPACE, seeds=[0])
+
+
+def test_evolution_dispatches_signature_buckets(data):
+    """The search routes whole generations through bucketed training: the
+    injected batch trainer sees signature-homogeneous genome lists and its
+    results land on the right population rows."""
+    tr, va = data
+    calls = []
+
+    def fake_batch_train(genomes):
+        calls.append(genomes)
+        return [TrainResult(detection_rate=0.95,
+                            false_alarm_rate=0.01 * g.depth(),
+                            val_loss=0.1, steps=0) for g in genomes]
+
+    cfg = NASConfig(generations=1, children_per_gen=6, n_accept=3,
+                    init_population=5, n_workers=2, seed=0)
+    s = EvolutionarySearch(cfg, tr, va, space=SPACE,
+                           batch_train_fn=fake_batch_train,
+                           log=lambda *_: None)
+    state = s.run()
+    assert state.generation == 1
+    assert calls, "batched trainer was never dispatched"
+    for genomes in calls:
+        assert len({str(shape_signature(g, SPACE)) for g in genomes}) == 1
+    # results were scattered back per candidate
+    trained = state.pop.trained_mask
+    assert trained.any()
+    got = state.pop.expensive[trained]
+    assert np.all(got[:, 0] == 1.0 - 0.95)  # miss everywhere
+
+
+def test_bucket_failure_marks_all_members_pessimistic(data):
+    tr, va = data
+
+    def exploding_batch_train(genomes):
+        raise RuntimeError("bucket OOM")
+
+    cfg = NASConfig(generations=1, children_per_gen=4, n_accept=2,
+                    init_population=4, n_workers=2, seed=0)
+    s = EvolutionarySearch(cfg, tr, va, space=SPACE,
+                           batch_train_fn=exploding_batch_train,
+                           log=lambda *_: None)
+    s.scheduler.max_retries = 0
+    state = s.init_state()
+    assert state.pop.trained_mask.all()
+    np.testing.assert_array_equal(
+        state.pop.expensive, np.ones_like(state.pop.expensive))
