@@ -1,0 +1,135 @@
+"""Multi-platform scoring throughput: one shared-context composite pass vs
+K sequential single-backend passes.
+
+``MultiPlatformBackend`` decodes/tabulates the population once and shares
+the platform-independent Eq. 1-4 intermediates (fully-folded latency
+recursion, α event table — DESIGN.md §10) across its members, so scoring K
+platforms should cost far less than K independent ``evaluate_batch`` calls.
+This bench measures genomes/sec at K = 1, 2, 4 backends and reports the
+speedup of the composite over the sequential baseline, parity-gated: the
+composite's column blocks must be bit-identical to each member evaluated
+alone before any timing is trusted.
+
+Acceptance target: >= 2x at K=4 (shared decode/tabulation + shared α event
+table; the marginal per-platform cost is just the profile-specific
+arithmetic).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.cost_backend import MultiPlatformBackend, get_backend
+from repro.core.genome import PopulationEncoding, random_genome
+from repro.core.search_space import DEFAULT_SPACE
+
+SMOKE_POP, FULL_POP = 2048, 4096
+REPEATS = 7
+# member order: the two paper FPGA domains first, then the low-power FPGA
+# and the TPU roofline — K=1/2/4 are prefixes of this list
+MEMBERS = ("fpga_zu", "fpga_zcu102", "fpga_pynq", "tpu_roofline")
+K_SWEEP = (1, 2, 4)
+TARGET_AT_4 = 2.0
+
+
+def _time(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(log=print, smoke: bool = True) -> List[Dict]:
+    pop = SMOKE_POP if smoke else FULL_POP
+    rng = np.random.default_rng(0)
+    log(f"[multi_platform] sampling {pop} genomes ...")
+    enc = PopulationEncoding.from_genomes(
+        [random_genome(rng, DEFAULT_SPACE) for _ in range(pop)])
+
+    rows: List[Dict] = []
+    for k in K_SWEEP:
+        members = MEMBERS[:k]
+        singles = [get_backend(m) for m in members]
+        multi = MultiPlatformBackend(members)
+
+        # parity gate: composite blocks == members evaluated alone
+        combined = multi.evaluate_batch(enc, space=DEFAULT_SPACE)
+        for i, be in enumerate(singles):
+            alone = be.evaluate_batch(enc, space=DEFAULT_SPACE)
+            assert np.array_equal(combined[:, i * 7:(i + 1) * 7], alone), \
+                f"parity failure for {members[i]}"
+
+        def seq():
+            for be in singles:
+                be.evaluate_batch(enc, space=DEFAULT_SPACE)
+
+        def shared():
+            multi.evaluate_batch(enc, space=DEFAULT_SPACE)
+
+        seq()      # warm-up both paths
+        shared()
+        # paired measurements so machine-state drift cancels in the ratio
+        t_seq, t_multi, ratios = [], [], []
+        for _ in range(REPEATS):
+            ts = _time(seq)
+            tm = _time(shared)
+            t_seq.append(ts)
+            t_multi.append(tm)
+            ratios.append(ts / tm)
+        tm = float(np.median(t_multi))
+        ts = float(np.median(t_seq))
+        speedup = float(np.median(ratios))
+        gps = pop * k / tm          # platform-scorings per second
+        log(f"[multi_platform] K={k} pop={pop}: shared {tm*1e3:.1f}ms "
+            f"({gps:,.0f} genome-platforms/s), sequential {ts*1e3:.1f}ms, "
+            f"speedup {speedup:.2f}x")
+        rows.append({
+            "name": f"multi_platform_k{k}_{pop}",
+            "us_per_call": tm * 1e6,
+            "derived": f"{gps:.0f}gp/s speedup={speedup:.2f}x",
+            "k": k, "pop": pop, "speedup": speedup,
+            "t_shared_s": tm, "t_sequential_s": ts,
+        })
+
+    at4 = next((r for r in rows if r["k"] == 4), None)
+    if at4 is not None:
+        ok = at4["speedup"] >= TARGET_AT_4
+        log(f"[multi_platform] target >= {TARGET_AT_4}x at K=4: "
+            f"{'OK' if ok else 'MISS'} ({at4['speedup']:.2f}x)")
+        rows.append({"name": "multi_platform_target_2x_at_k4",
+                     "us_per_call": 0.0, "derived": str(ok)})
+    return rows
+
+
+def write_json(rows: List[Dict], path: str) -> None:
+    """The machine-readable result format (single writer — run.py and the
+    CLI below both route through this)."""
+    with open(path, "w") as f:
+        json.dump({"bench": "multi_platform", "rows": rows}, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help=f"population {FULL_POP} (default: smoke, "
+                         f"{SMOKE_POP})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="explicit smoke mode (the default; kept for CI "
+                         "command-line clarity)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write machine-readable results here")
+    args = ap.parse_args()
+    rows = run(smoke=not args.full)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    if args.json:
+        write_json(rows, args.json)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ def main() -> None:
 
     from benchmarks import (
         kernel_bench,
+        multi_platform_bench,
         nas_loop_bench,
         population_eval_bench,
         roofline_table,
@@ -33,6 +34,13 @@ def main() -> None:
     rows += kernel_bench.run(log=lambda *a: print(*a, file=sys.stderr))
     rows += population_eval_bench.run(
         log=lambda *a: print(*a, file=sys.stderr))
+    multi_platform_rows = multi_platform_bench.run(
+        log=lambda *a: print(*a, file=sys.stderr), smoke=not args.full)
+    rows += multi_platform_rows
+    if args.json:
+        multi_platform_bench.write_json(multi_platform_rows,
+                                        "BENCH_multi_platform.json")
+        print("# wrote BENCH_multi_platform.json", file=sys.stderr)
     nas_loop_rows = nas_loop_bench.run(
         log=lambda *a: print(*a, file=sys.stderr), smoke=not args.full)
     rows += nas_loop_rows

@@ -41,16 +41,15 @@ def main():
     search = EvolutionarySearch(cfg, data_train, data_val)
     state = search.run()
 
-    print("\n== Pareto-frontier solutions per deployment objective ==")
-    for objective in ("energy_max_alpha_j", "energy_min_alpha_j",
-                      "power_min_alpha_w"):
-        sol = search.select_solution(state, objective)
+    print("\n== Pareto-frontier solutions per design goal (paper §VI-B) ==")
+    for goal in ("low_energy", "low_power", "high_throughput"):
+        sol = search.select_for_goal(state, goal)
         if sol is None:
-            print(f"-- {objective}: no feasible candidate yet "
+            print(f"-- {goal}: no feasible candidate yet "
                   f"(needs more generations)")
             continue
         det = 1.0 - sol.expensive[0]
-        print(f"\n-- best for {objective} "
+        print(f"\n-- best for {goal} "
               f"(detection={det:.3f}, false alarm={sol.expensive[1]:.3f}):")
         print(describe(sol.genome))
 

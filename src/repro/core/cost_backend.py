@@ -2,21 +2,31 @@
 
 The search layers never touch Eq. 1-4 (or roofline) math directly: they hand
 a :class:`~repro.core.genome.PopulationEncoding` to a :class:`CostBackend`
-and get back an ``(N, 7)`` objective matrix in ``CHEAP_NAMES`` order
-(DESIGN.md §2).  Two implementations ship:
+and get back an objective matrix whose columns are described by the
+backend's :class:`~repro.core.objective_schema.ObjectiveSchema` (DESIGN.md
+§2, §10).  Implementations:
 
 * :class:`FPGAAnalyticBackend` — the paper's analytic Eq. 1-4 models,
   vectorized over the population, for any :class:`HardwareProfile` (the four
-  calibrated profiles in :mod:`repro.core.hw_model`).
+  calibrated profiles in :mod:`repro.core.hw_model`).  ``(N, 7)`` in
+  ``CHEAP_NAMES`` order, platform-tagged with the profile name.
 * :class:`TPURooflineBackend` — the three-term v5e roofline.  Besides scoring
   genomes it owns the shared :meth:`~TPURooflineBackend.roofline_terms`
   helper consumed by :mod:`repro.core.tpu_codesign` and
   :mod:`repro.launch.roofline`, so the pod-scale roofline math lives in
   exactly one place.
+* :class:`MultiPlatformBackend` — a composite that scores one population
+  against K member backends in a single call, sharing the decode/tabulation
+  and the platform-independent Eq. 1-4 intermediates
+  (:class:`~repro.core.hw_model.SharedPopulationEval`); the result is an
+  ``(N, K*7)`` matrix whose schema carries per-platform column groups —
+  the engine behind cross-platform Pareto fronts.
 """
 from __future__ import annotations
 
-from typing import Dict, Protocol, Union, runtime_checkable
+import inspect
+from typing import Dict, List, Optional, Protocol, Sequence, Union, \
+    runtime_checkable
 
 import numpy as np
 
@@ -27,10 +37,12 @@ from repro.core.hw_model import (
     TPU_V5E,
     HardwareProfile,
     RooflineTerms,
+    SharedPopulationEval,
     batch_estimate,
     population_layer_costs,
     roofline,
 )
+from repro.core.objective_schema import ObjectiveSchema
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
 
 
@@ -42,31 +54,52 @@ class CostBackend(Protocol):
 
     def evaluate_batch(self, enc: PopulationEncoding, *,
                        space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
-        """``(N, 7)`` cheap-objective matrix (``CHEAP_NAMES`` order)."""
+        """``(N, C)`` cheap-objective matrix (``schema`` column order)."""
         ...
 
     def evaluate(self, g: Genome, *,
                  space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
-        """``(7,)`` objectives for a single genome."""
+        """``(C,)`` objectives for a single genome."""
         ...
+
+
+def backend_schema(be: CostBackend) -> ObjectiveSchema:
+    """The backend's cheap-column schema.
+
+    Backends written before the schema layer (or third-party ones) are
+    adopted as one platform of 7 ``CHEAP_NAMES`` columns tagged with their
+    ``platform`` attribute (falling back to ``name``).
+    """
+    schema = getattr(be, "schema", None)
+    if schema is not None:
+        return schema
+    return ObjectiveSchema.cheap(getattr(be, "platform", be.name))
 
 
 class FPGAAnalyticBackend:
     """Vectorized Eq. 1-4 evaluation against one hardware profile.
 
     Bit-for-bit consistent with the scalar ``estimate``/``cheap_objectives``
-    reference path (tests/test_cost_backend_parity.py).
+    reference path (tests/test_cost_backend_parity.py), with or without a
+    shared evaluation context.
     """
 
     def __init__(self, profile: HardwareProfile = FPGA_ZU):
         self.profile = profile
+        self.platform = profile.name
         self.name = f"fpga_analytic[{profile.name}]"
+        self.schema = ObjectiveSchema.cheap(self.platform)
 
     def evaluate_batch(self, enc: PopulationEncoding, *,
-                       space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
-        costs = population_layer_costs(enc, space)
-        lo = batch_estimate(costs, strategy="min", profile=self.profile)
-        hi = batch_estimate(costs, strategy="max", profile=self.profile)
+                       space: SearchSpace = DEFAULT_SPACE,
+                       shared: Optional[SharedPopulationEval] = None
+                       ) -> np.ndarray:
+        if shared is None:
+            shared = SharedPopulationEval(population_layer_costs(enc, space))
+        lo = batch_estimate(shared.costs, strategy="min",
+                            profile=self.profile, shared=shared)
+        hi = batch_estimate(shared.costs, strategy="max",
+                            profile=self.profile, shared=shared)
         return np.stack([
             lo.p_total_w, hi.p_total_w,
             lo.e_total_j, hi.e_total_j,
@@ -91,9 +124,11 @@ class TPURooflineBackend:
     """
 
     name = "tpu_roofline"
+    platform = "tpu_roofline"
 
     def __init__(self, profile: HardwareProfile = TPU_V5E):
         self.profile = profile
+        self.schema = ObjectiveSchema.cheap(self.platform)
 
     # ---- the shared pod-roofline helper (codesign + launch consume this)
     def roofline_terms(self, flops: float, bytes_hbm: float,
@@ -102,11 +137,14 @@ class TPURooflineBackend:
 
     # ---- genome scoring --------------------------------------------------
     def evaluate_batch(self, enc: PopulationEncoding, *,
-                       space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
-        costs = population_layer_costs(enc, space)
-        macs = np.where(costs.valid, costs.total_macs, 0).sum(axis=1) \
-            .astype(np.float64)
-        params = np.where(costs.valid, costs.params, 0).sum(axis=1)
+                       space: SearchSpace = DEFAULT_SPACE,
+                       shared: Optional[SharedPopulationEval] = None
+                       ) -> np.ndarray:
+        if shared is None:
+            shared = SharedPopulationEval(population_layer_costs(enc, space))
+        costs = shared.costs
+        macs = shared.mac_totals.astype(np.float64)
+        params = shared.param_totals
         act_vals = np.where(costs.valid, costs.out_len * costs.out_channels,
                             0).sum(axis=1).astype(np.float64)
         w_bits = np.asarray(space.weight_bits, np.float64)[enc.w_bits]
@@ -135,20 +173,77 @@ class TPURooflineBackend:
         return self.evaluate_batch(enc, space=space)[0]
 
 
+class MultiPlatformBackend:
+    """Score one population against K backends in a single call.
+
+    The composite decodes and tabulates the population exactly once
+    (:class:`~repro.core.hw_model.SharedPopulationEval`) and hands the
+    shared context to each member, so the per-member marginal cost is just
+    the platform-specific Eq. 1-4 / roofline arithmetic — member columns
+    are bit-identical to evaluating that member alone
+    (tests/test_multi_platform.py).  The ``(N, K*7)`` result's ``schema``
+    concatenates the members' platform-tagged column groups.
+    """
+
+    def __init__(self, backends: Sequence[BackendSpec]):
+        if not backends:
+            raise ValueError("MultiPlatformBackend needs >= 1 backend")
+        members: List[CostBackend] = []
+        for spec in backends:
+            be = get_backend(spec)
+            if isinstance(be, MultiPlatformBackend):
+                members.extend(be.backends)   # flatten nested composites
+            else:
+                members.append(be)
+        self.backends: tuple = tuple(members)
+        # third-party backends may implement only the bare protocol
+        # signature — the shared context is an optimization, not a contract
+        self._accepts_shared = tuple(
+            "shared" in inspect.signature(be.evaluate_batch).parameters
+            for be in self.backends)
+        # raises on duplicate platform tags — one column group per platform
+        self.schema = ObjectiveSchema.concat(
+            [backend_schema(be) for be in self.backends])
+        self.name = "multi[" + "+".join(self.schema.platforms) + "]"
+
+    def __len__(self) -> int:
+        return len(self.backends)
+
+    def evaluate_batch(self, enc: PopulationEncoding, *,
+                       space: SearchSpace = DEFAULT_SPACE,
+                       shared: Optional[SharedPopulationEval] = None
+                       ) -> np.ndarray:
+        if shared is None:
+            shared = SharedPopulationEval(population_layer_costs(enc, space))
+        return np.concatenate(
+            [be.evaluate_batch(enc, space=space, shared=shared) if ok
+             else be.evaluate_batch(enc, space=space)
+             for be, ok in zip(self.backends, self._accepts_shared)],
+            axis=1)
+
+    def evaluate(self, g: Genome, *,
+                 space: SearchSpace = DEFAULT_SPACE) -> np.ndarray:
+        enc = PopulationEncoding.from_genomes([g])
+        return self.evaluate_batch(enc, space=space)[0]
+
+
 # Shared singleton: every pod-roofline consumer routes through this object.
 TPU_ROOFLINE = TPURooflineBackend()
 
 _ANALYTIC_CACHE: Dict[str, FPGAAnalyticBackend] = {}
 
-BackendSpec = Union[CostBackend, HardwareProfile, str]
+BackendSpec = Union["CostBackend", HardwareProfile, str,
+                    Sequence[Union["CostBackend", HardwareProfile, str]]]
 
 
 def get_backend(spec: BackendSpec) -> CostBackend:
-    """Resolve a backend instance, profile, or name to a CostBackend.
+    """Resolve a backend instance, profile, name, or sequence thereof.
 
     Accepts a ready CostBackend (returned as-is), a
-    :class:`HardwareProfile` (wrapped in a cached FPGAAnalyticBackend), or a
-    string: one of the profile names in ``PROFILES`` or ``"tpu_roofline"``.
+    :class:`HardwareProfile` (wrapped in a cached FPGAAnalyticBackend), a
+    string (one of the profile names in ``PROFILES`` or ``"tpu_roofline"``),
+    or a sequence of any of those (wrapped in a
+    :class:`MultiPlatformBackend` — the multi-platform scoring pipeline).
     """
     if isinstance(spec, HardwareProfile):
         be = _ANALYTIC_CACHE.get(spec.name)
@@ -163,6 +258,8 @@ def get_backend(spec: BackendSpec) -> CostBackend:
             return get_backend(PROFILES[spec])
         raise KeyError(f"unknown cost backend {spec!r} "
                        f"(profiles: {sorted(PROFILES)}, tpu_roofline)")
+    if isinstance(spec, (list, tuple)):
+        return MultiPlatformBackend(spec)
     if isinstance(spec, CostBackend):  # runtime-checkable structural match
         return spec
     raise TypeError(f"cannot resolve cost backend from {type(spec).__name__}")

@@ -26,12 +26,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import selection as sel
-from repro.core.cost_backend import BackendSpec, get_backend
+from repro.core.cost_backend import BackendSpec, backend_schema, get_backend
 from repro.core.genome import (
     Genome,
     PopulationEncoding,
@@ -40,12 +40,19 @@ from repro.core.genome import (
     random_population,
 )
 from repro.core.hw_model import FPGA_ZU, HardwareProfile
+from repro.core.objective_schema import (
+    Constraints,
+    DesignGoal,
+    ObjectiveSchema,
+    get_goal,
+)
 from repro.core.objectives import (
     Candidate,
     PopulationArrays,
     expensive_objectives,
 )
 from repro.core.pareto import (
+    domination_matrices,
     domination_matrix,
     environmental_selection,
     pareto_front,
@@ -75,9 +82,17 @@ class NASConfig:
     seed: int = 0
     profile: HardwareProfile = FPGA_ZU
     backend: Optional[BackendSpec] = None  # cost backend; default = profile
+    backends: Optional[Sequence[BackendSpec]] = None  # multi-platform: one
+    #   population scored against K platforms (MultiPlatformBackend)
+    goal: Union[str, DesignGoal] = "balanced"  # deployment design goal —
+    #   selects/weights schema columns for selection + the final report
     det_min: float = 0.90          # paper's hard acceptance limits
     fa_max: float = 0.20
     batch_training: bool = True    # bucketed vmap-stacked training (§9)
+
+    @property
+    def constraints(self) -> Constraints:
+        return Constraints(self.det_min, self.fa_max)
 
 
 @dataclasses.dataclass
@@ -111,8 +126,29 @@ class EvolutionarySearch:
         self.cfg = config
         self.space = space
         self.rng = np.random.default_rng(config.seed)
-        self.backend = get_backend(config.backend if config.backend
-                                   is not None else config.profile)
+        if config.backends is not None:
+            if config.backend is not None:
+                raise ValueError("NASConfig.backend and NASConfig.backends "
+                                 "are mutually exclusive")
+            self.backend = get_backend(list(config.backends))
+        else:
+            self.backend = get_backend(config.backend if config.backend
+                                       is not None else config.profile)
+        # the objective layer is schema-described (DESIGN.md §10): cheap
+        # columns from the backend, + the expensive pair for selection
+        self.schema: ObjectiveSchema = backend_schema(self.backend)
+        self.full_schema: ObjectiveSchema = self.schema.with_expensive()
+        self.goal: DesignGoal = get_goal(config.goal)
+        self.constraints: Constraints = self.goal.effective_constraints(
+            config.constraints)
+        # goal-conditioned column views; None = all columns (the balanced
+        # default — bit-identical to the pre-schema engine)
+        sel_cols = self.goal.selection_indices(self.full_schema)
+        self._goal_cols = None if len(sel_cols) == len(self.full_schema) \
+            else sel_cols
+        kde_cols = sel_cols[sel_cols < len(self.schema)]  # cheap part only
+        self._kde_cols = None if len(kde_cols) == len(self.schema) \
+            else kde_cols
         self.log = log
         self._train_fn = train_fn or (lambda g: train_candidate(
             g, data_train, data_val, space=self.space,
@@ -162,7 +198,8 @@ class EvolutionarySearch:
             cheap=self.backend.evaluate_batch(enc, space=self.space),
             expensive=np.full((len(enc), 2), np.nan),
             phash=np.asarray(hashes, dtype=object),
-            born=np.full(len(enc), generation, dtype=np.int64))
+            born=np.full(len(enc), generation, dtype=np.int64),
+            schema=self.schema)
 
     def init_state(self) -> NASState:
         enc, hashes = self._sample_unique(self.cfg.init_population)
@@ -176,7 +213,8 @@ class EvolutionarySearch:
                        ) -> Optional[PopulationArrays]:
         pop = state.pop
         parents_idx = sel.sample_parents(self.rng, pop.cheap,
-                                         self.cfg.children_per_gen)
+                                         self.cfg.children_per_gen,
+                                         cols=self._kde_cols)
         parents = pop.enc.take(parents_idx)
         if len(pop) > 1:
             xo = self.rng.random(len(parents_idx)) < self.cfg.crossover_prob
@@ -281,7 +319,8 @@ class EvolutionarySearch:
         if children is not None:
             acc_idx = sel.preselect_children(self.rng, state.pop.cheap,
                                              children.cheap,
-                                             self.cfg.n_accept)
+                                             self.cfg.n_accept,
+                                             cols=self._kde_cols)
             accepted = children.take(acc_idx)
             self._train_members(state, accepted,
                                 np.arange(len(accepted)))
@@ -291,16 +330,21 @@ class EvolutionarySearch:
             merged = state.pop
             n_children = n_trained = 0
 
+        # goal-conditioned objective view (all columns for the balanced
+        # default — bit-identical to the pre-schema engine); one domination
+        # matrix serves both the environmental selection and the kept
+        # population's front-size report
         objs = merged.objective_matrix()
-        # one domination matrix serves both the environmental selection and
-        # the kept population's front-size report
+        if self._goal_cols is not None:
+            objs = objs[:, self._goal_cols]
         dom = domination_matrix(objs)
         keep = environmental_selection(objs, self.cfg.population_cap, dom=dom)
         new_pop = merged.take(keep)
 
         state.generation += 1
         front = pareto_front(objs[keep], dom=dom[np.ix_(keep, keep)])
-        feasible = new_pop.feasible_mask(self.cfg.det_min, self.cfg.fa_max)
+        feasible = new_pop.feasible_mask(self.constraints)
+        primary = self.goal.primary_indices(self.schema)
         rec = {
             "generation": state.generation,
             "children": n_children,
@@ -308,7 +352,10 @@ class EvolutionarySearch:
             "population": len(new_pop),
             "front_size": int(len(front)),
             "feasible": int(feasible.sum()),
-            "best_energy_j": float(new_pop.cheap[feasible, 3].min())
+            # worst-across-platforms primary objective of the best feasible
+            # member (single platform: just its primary objective)
+            "best_primary": float(
+                new_pop.cheap[np.ix_(feasible, primary)].max(axis=1).min())
             if feasible.any() else float("nan"),
             "elapsed_s": time.monotonic() - t0,
         }
@@ -317,7 +364,7 @@ class EvolutionarySearch:
         self.log(f"[nas] gen {rec['generation']:3d} "
                  f"pop={rec['population']} front={rec['front_size']} "
                  f"feasible={rec['feasible']} "
-                 f"bestE={rec['best_energy_j']:.3e}J "
+                 f"best[{self.goal.primary}]={rec['best_primary']:.3e} "
                  f"({rec['elapsed_s']:.1f}s)")
         return state
 
@@ -340,6 +387,7 @@ class EvolutionarySearch:
         payload = {
             "generation": state.generation,
             "history": state.history,
+            "schema": self.schema.to_json(),
             "evaluated": {k: v.tolist()
                           for k, v in state.evaluated_hashes.items()},
             "rng_state": self.rng.bit_generator.state,
@@ -360,11 +408,29 @@ class EvolutionarySearch:
     def load_state(self, path: str) -> NASState:
         """Restore a checkpoint.  Also restores this driver's RNG state (when
         present — older checkpoints load fine without it), so resuming
-        reproduces the uninterrupted run bit-for-bit."""
+        reproduces the uninterrupted run bit-for-bit.
+
+        The persisted objective schema is validated against this driver's
+        backend: resuming a checkpoint under a different platform set would
+        silently misread the cheap matrix, so a mismatch raises.  Pre-schema
+        checkpoints are accepted when the column count matches."""
         import json as _json
         with open(path) as f:
             payload = _json.load(f)
+        if "schema" in payload:
+            saved = ObjectiveSchema.from_json(payload["schema"])
+            if saved != self.schema:
+                raise ValueError(
+                    f"checkpoint objective schema "
+                    f"{list(saved.qualified_names)} does not match this "
+                    f"search's backend schema "
+                    f"{list(self.schema.qualified_names)} — resume with the "
+                    f"same backends/goal configuration")
         members = payload["population"]
+        if members and len(members[0]["cheap"]) != len(self.schema):
+            raise ValueError(
+                f"checkpoint cheap matrix has {len(members[0]['cheap'])} "
+                f"columns; this search's schema has {len(self.schema)}")
         genomes = [Genome(
             op_genes=tuple(m["genome"]["op_genes"]),
             conn_genes=tuple(m["genome"]["conn_genes"]),
@@ -382,7 +448,8 @@ class EvolutionarySearch:
             cheap=np.asarray([m["cheap"] for m in members], np.float64),
             expensive=expensive,
             phash=np.asarray([m["phash"] for m in members], dtype=object),
-            born=np.asarray([m["generation"] for m in members], np.int64))
+            born=np.asarray([m["generation"] for m in members], np.int64),
+            schema=self.schema)
         if "rng_state" in payload:
             self.rng.bit_generator.state = payload["rng_state"]
         return NASState(
@@ -407,14 +474,63 @@ class EvolutionarySearch:
         return state
 
     # ---------------------------------------------------------------- report
-    def select_solution(self, state: NASState, objective: str = "energy_max_alpha_j"
+    def select_solution(self, state: NASState,
+                        objective: str = "energy_max_alpha_j",
+                        platform: Optional[str] = None
                         ) -> Optional[Candidate]:
-        """Best feasible candidate for a deployment objective (paper §VI-B)."""
-        from repro.core.objectives import CHEAP_NAMES
-        idx = CHEAP_NAMES.index(objective)
-        feas = state.pop.feasible_mask(self.cfg.det_min, self.cfg.fa_max)
+        """Best feasible candidate for a deployment objective (paper §VI-B).
+
+        ``objective`` is a schema query, not a position: pass a bare name
+        (single-platform searches), a qualified ``platform:name``, or a bare
+        name plus ``platform`` to disambiguate a multi-platform schema.
+        """
+        idx = self.schema.index(objective, platform=platform)
+        feas = state.pop.feasible_mask(self.constraints)
         if not feas.any():
             return None
         rows = np.nonzero(feas)[0]
         return state.pop.candidate(
             int(rows[np.argmin(state.pop.cheap[rows, idx])]))
+
+    def select_for_goal(self, state: NASState,
+                        goal: Union[None, str, DesignGoal] = None
+                        ) -> Optional[Candidate]:
+        """Best feasible candidate under a design goal (default: the
+        search's own).  With several platforms in the goal's scope the
+        ranking value is the *worst* (max) primary objective across them —
+        the robust cross-platform pick."""
+        g = self.goal if goal is None else get_goal(goal)
+        cols = g.primary_indices(self.schema)
+        feas = state.pop.feasible_mask(
+            g.effective_constraints(self.cfg.constraints))
+        if not feas.any():
+            return None
+        rows = np.nonzero(feas)[0]
+        score = state.pop.cheap[np.ix_(rows, cols)].max(axis=1)
+        return state.pop.candidate(int(rows[np.argmin(score)]))
+
+    def pareto_fronts(self, state: NASState) -> Dict[str, np.ndarray]:
+        """Per-platform and cross-platform Pareto fronts of the population.
+
+        Returns ``{"cross_platform": idx, <platform>: idx, ...}`` — front
+        membership over the full objective matrix and over each platform's
+        column group (its cheap columns + the expensive pair).  All fronts
+        come from one shared pass over the per-column comparisons
+        (:func:`~repro.core.pareto.domination_matrices`).
+        """
+        objs = state.pop.objective_matrix()
+        n_cols = len(self.full_schema)
+        # single-platform schemas: every platform group equals the full
+        # column set — alias the cross-platform front instead of building
+        # identical (N, N) matrices
+        groups = {"cross_platform": np.arange(n_cols)}
+        for p in self.schema.platforms:
+            cols = self.full_schema.platform_group(p)
+            if len(cols) < n_cols:
+                groups[p] = cols
+        doms = domination_matrices(objs, list(groups.values()))
+        fronts = {name: np.nonzero(dom.sum(axis=0) == 0)[0]
+                  for name, dom in zip(groups, doms)}
+        for p in self.schema.platforms:
+            fronts.setdefault(p, fronts["cross_platform"])
+        return fronts

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -325,8 +325,141 @@ def population_layer_costs(enc: PopulationEncoding,
                              enc.input_lengths(space))
 
 
+@dataclasses.dataclass(frozen=True)
+class AlphaEventTable:
+    """Budget-independent precomputation of :func:`batch_resolve_alphas`.
+
+    Everything about the doubling-event merge except the platform's
+    resource budget: per-layer event counts/first rounds, the boundary-round
+    event order, and the closed-form round totals ``S(r)`` tabulated for
+    every round.  One table serves every :class:`HardwareProfile` scoring
+    the same population (``MultiPlatformBackend``): a profile's α factors
+    then cost one ``(N, R)`` budget comparison plus the boundary-round
+    step, instead of the full binary search (DESIGN.md §10).
+    """
+
+    k_count: np.ndarray   # (N, T) doubling events per layer
+    d: np.ndarray         # (N, T) first round of each layer
+    amax: np.ndarray      # (N, T) per-layer unrolling caps
+    order: np.ndarray     # (N, T) boundary event order (M-desc, index-asc)
+    s_table: np.ndarray   # (N, R) budget units consumed by rounds 0..r
+
+
+def build_alpha_events(costs: LayerCostArrays) -> AlphaEventTable:
+    """Tabulate the doubling-event structure of a population's layers.
+
+    ``s_table[:, r]`` is the closed-form round total ``S(r)`` (the binary
+    search's ``total_after``) evaluated for every round up front — R is
+    small (≈ ``log2(alpha_cap)``-scale), so the full table costs a handful
+    of ``(N, T)`` integer passes and then serves every profile's budget
+    query as one comparison.
+    """
+    amax = costs.alpha_max
+    n, t_pad = amax.shape
+    m = np.maximum(costs.macs_per_out, 1)
+    k_count = _bit_length(amax - 1)
+    theta = m.max(axis=1, keepdims=True)
+    d = _bit_length((theta - 1) // m)
+    big_m = m << d                                # in [theta, 2*theta)
+    # event order: M-descending, ties to the lower layer index.  Dead and
+    # finished events carry step 0 at query time, so they are harmless
+    # wherever they land — the order never depends on the budget.
+    key = (2 * theta - big_m) * t_pad + np.arange(t_pad)
+    order = np.argsort(key, axis=1)
+
+    n_rounds = int((d + k_count).max(initial=0)) + 2
+    s_table = np.empty((n, n_rounds), dtype=np.int64)
+    for r in range(n_rounds):
+        c = np.clip(r - d + 1, 0, k_count)
+        s_table[:, r] = (np.minimum(np.left_shift(1, c), amax) - 1) \
+            .sum(axis=1)
+    return AlphaEventTable(k_count=k_count, d=d, amax=amax, order=order,
+                           s_table=s_table)
+
+
+def _resolve_max_from_events(costs: LayerCostArrays,
+                             profile: HardwareProfile,
+                             ev: AlphaEventTable) -> np.ndarray:
+    """``max``-strategy α resolution against a precomputed event table.
+
+    Identical factors to the binary-search path, layer for layer: both
+    compute the exact crossing round ``min{r : S(r) > budget}`` (here a
+    table lookup) and apply the same boundary-round prefix clip.
+    """
+    budget = (profile.alpha_cap - costs.n_layers).astype(np.int64)
+    over = ev.s_table > budget[:, None]
+    # rows that never cross the budget finish every event; any round past
+    # the table leaves the boundary empty, matching the search's terminal lo
+    lo = np.where(over.any(axis=1), over.argmax(axis=1),
+                  ev.s_table.shape[1])
+    c_prev = np.clip(lo[:, None] - ev.d, 0, ev.k_count)
+    a_prev = np.minimum(np.left_shift(1, c_prev), ev.amax)
+    b_rem = np.maximum(budget - (a_prev - 1).sum(axis=1), 0)
+    k = lo[:, None] - ev.d
+    alive = (k >= 0) & (k < ev.k_count)
+    a_pre = np.left_shift(1, np.where(alive, k, 0))
+    step = np.where(alive, np.minimum(a_pre, ev.amax - a_pre), 0)
+    step_sorted = np.take_along_axis(step, ev.order, axis=1)
+    cum = np.cumsum(step_sorted, axis=1)
+    applied = np.clip(b_rem[:, None] - (cum - step_sorted), 0, step_sorted)
+    np.put_along_axis(step, ev.order, applied, axis=1)
+    return a_prev + step
+
+
+class SharedPopulationEval:
+    """Per-population intermediates shared across platform evaluations.
+
+    ``MultiPlatformBackend`` decodes/tabulates a population once and hands
+    this object to each member backend; the lazily cached pieces (α event
+    table, fully-folded latency recursion, per-profile max-α factors) are
+    bit-identical to what each backend would have computed alone.
+    """
+
+    def __init__(self, costs: LayerCostArrays):
+        self.costs = costs
+        self._max_alphas: dict = {}   # alpha_cap -> (N, T) factors
+
+    @functools.cached_property
+    def alpha_events(self) -> AlphaEventTable:
+        return build_alpha_events(self.costs)
+
+    @functools.cached_property
+    def min_latency(self) -> Tuple[np.ndarray, np.ndarray]:
+        """``(t_total, sigmas)`` of the fully folded (α=1) datapath."""
+        return _latency_from_ratio(self.costs, self.costs.l_cycles)
+
+    def max_alphas(self, profile: HardwareProfile) -> np.ndarray:
+        """Cached ``max``-strategy factors for one profile (resolved from
+        the shared event table on first use).  The cache keys on the
+        resource budget (``alpha_cap``) — the only profile field the
+        resolution depends on."""
+        cached = self._max_alphas.get(int(profile.alpha_cap))
+        if cached is None:
+            cached = _resolve_max_from_events(self.costs, profile,
+                                              self.alpha_events)
+            self._max_alphas[int(profile.alpha_cap)] = cached
+        return cached
+
+    @functools.cached_property
+    def min_cycles(self) -> "MinCycleQuantities":
+        """Profile-independent cycle-domain quantities of the fully folded
+        (α=1) datapath, shared by every member's ``min``-strategy estimate."""
+        return _min_cycle_quantities(self.costs, self.min_latency)
+
+    @functools.cached_property
+    def param_totals(self) -> np.ndarray:
+        return np.where(self.costs.valid, self.costs.params, 0).sum(axis=1)
+
+    @functools.cached_property
+    def mac_totals(self) -> np.ndarray:
+        return np.where(self.costs.valid, self.costs.total_macs, 0) \
+            .sum(axis=1)
+
+
 def batch_resolve_alphas(costs: LayerCostArrays, strategy: str,
-                         profile: HardwareProfile) -> np.ndarray:
+                         profile: HardwareProfile,
+                         events: Optional[AlphaEventTable] = None
+                         ) -> np.ndarray:
     """Vectorized :func:`resolve_alphas`: ``(N, T)`` unrolling factors.
 
     The scalar ``max`` loop repeatedly steps the highest-latency layer that
@@ -358,12 +491,20 @@ def batch_resolve_alphas(costs: LayerCostArrays, strategy: str,
     comparisons are exact too: integer MACs divided by powers of two), so
     the factors are identical to the scalar loop, genome for genome —
     enforced by tests/test_cost_backend_parity.py.
+
+    The inline binary-search body below is the *reference twin* of the
+    shared event-table fast path (:func:`_resolve_max_from_events`): the
+    boundary-round block is intentionally duplicated between them, and
+    tests/test_multi_platform.py pins the two to exact equality across
+    every profile and tight-cap boundary case — edit one, sweep both.
     """
     n, t_pad = costs.l_cycles.shape
     if strategy == "min":
         return np.ones((n, t_pad), np.int64)
     if strategy != "max":
         raise ValueError(strategy)
+    if events is not None:
+        return _resolve_max_from_events(costs, profile, events)
     amax = costs.alpha_max
     budget = (profile.alpha_cap - costs.n_layers).astype(np.int64)
     m = np.maximum(costs.macs_per_out, 1)        # padded slots -> 1
@@ -438,6 +579,40 @@ def batch_sample_runtime_cycles(costs: LayerCostArrays, alphas: np.ndarray
 
 
 @dataclasses.dataclass(frozen=True)
+class MinCycleQuantities:
+    """Cycle-domain quantities of the fully folded (α=1) datapath.
+
+    Everything here is independent of the :class:`HardwareProfile` (clock
+    and power constants enter later), so one instance serves every platform
+    scoring the same population (``SharedPopulationEval.min_cycles``).
+    """
+
+    t_lat: np.ndarray     # (N,) Eq. 1 pipeline latency, cycles
+    sigmas: np.ndarray    # (N, T) output-rate recursion
+    t_cyc: np.ndarray     # (N,) per-sample runtime (fill + drain), cycles
+    duty: np.ndarray      # (N, T) per-layer duty fractions (Eq. 3)
+    interval: np.ndarray  # (N,) steady-state sample interval, cycles
+
+
+def _min_cycle_quantities(costs: LayerCostArrays,
+                          min_latency: Tuple[np.ndarray, np.ndarray]
+                          ) -> MinCycleQuantities:
+    t_lat, sigmas = min_latency
+    ar, last = np.arange(len(costs)), costs.last_index
+    n_out_last = costs.n_out[ar, last]
+    t_cyc = t_lat + np.maximum(0, n_out_last - 1) * sigmas[ar, last]
+    duty = np.minimum(1.0, costs.n_out * costs.l_cycles
+                      / np.maximum(t_cyc, 1.0)[:, None])
+    drain = np.maximum(1.0, np.maximum(0, n_out_last - 1) * sigmas[ar, last]
+                       + costs.l_cycles[ar, last])
+    bottleneck = np.max(
+        np.where(costs.valid, costs.l_cycles * costs.n_out, -np.inf), axis=1)
+    return MinCycleQuantities(t_lat=t_lat, sigmas=sigmas, t_cyc=t_cyc,
+                              duty=duty,
+                              interval=np.maximum(bottleneck, drain))
+
+
+@dataclasses.dataclass(frozen=True)
 class BatchHwEstimate:
     """:class:`HwEstimate` for a whole population — every field an array."""
 
@@ -472,18 +647,43 @@ class BatchHwEstimate:
 
 
 def batch_estimate(costs: LayerCostArrays, *, strategy: str = "min",
-                   profile: HardwareProfile = FPGA_ZU) -> BatchHwEstimate:
-    """Vectorized :func:`estimate` over pre-tabulated population costs."""
+                   profile: HardwareProfile = FPGA_ZU,
+                   shared: Optional[SharedPopulationEval] = None
+                   ) -> BatchHwEstimate:
+    """Vectorized :func:`estimate` over pre-tabulated population costs.
+
+    Pass ``shared`` (a :class:`SharedPopulationEval` over the same
+    ``costs``) to reuse the platform-independent intermediates across
+    several profiles — results are bit-identical either way.
+    """
     n, t_pad = costs.l_cycles.shape
     ar = np.arange(n)
-    alphas = batch_resolve_alphas(costs, strategy, profile)
-    # min-alpha leaves every factor at 1: skip the (N, T) division
-    l_over_a = costs.l_cycles if strategy == "min" \
-        else costs.l_cycles / alphas
-    t_lat, sigmas = _latency_from_ratio(costs, l_over_a)
     last = costs.last_index
-    n_out_last = costs.n_out[ar, last]
-    t_cyc = t_lat + np.maximum(0, n_out_last - 1) * sigmas[ar, last]
+    if strategy == "min":
+        # fully folded: every factor is 1 and the cycle-domain quantities
+        # are profile-independent (sharable across platforms)
+        alphas = np.ones((n, t_pad), np.int64)
+        mc = shared.min_cycles if shared is not None else \
+            _min_cycle_quantities(costs,
+                                  _latency_from_ratio(costs, costs.l_cycles))
+        t_lat, sigmas, t_cyc = mc.t_lat, mc.sigmas, mc.t_cyc
+        duty_all, interval = mc.duty, mc.interval
+    elif strategy == "max":
+        alphas = shared.max_alphas(profile) if shared is not None \
+            else batch_resolve_alphas(costs, strategy, profile)
+        l_over_a = costs.l_cycles / alphas
+        t_lat, sigmas = _latency_from_ratio(costs, l_over_a)
+        n_out_last = costs.n_out[ar, last]
+        t_cyc = t_lat + np.maximum(0, n_out_last - 1) * sigmas[ar, last]
+        duty_all = np.minimum(1.0, costs.n_out * l_over_a
+                              / np.maximum(t_cyc, 1.0)[:, None])
+        drain = np.maximum(1.0, np.maximum(0, n_out_last - 1)
+                           * sigmas[ar, last] + l_over_a[ar, last])
+        bottleneck = np.max(
+            np.where(costs.valid, l_over_a * costs.n_out, -np.inf), axis=1)
+        interval = np.maximum(bottleneck, drain)
+    else:
+        raise ValueError(strategy)
     t_s = t_cyc / profile.f_clk
 
     # Eq. 3 — accumulated layer-by-layer in scalar order
@@ -491,18 +691,17 @@ def batch_estimate(costs: LayerCostArrays, *, strategy: str = "min",
     for t in range(t_pad):
         v = costs.valid[:, t]
         a = alphas[:, t]
-        duty = np.minimum(1.0, costs.n_out[:, t] * l_over_a[:, t]
-                          / np.maximum(t_cyc, 1.0))
         p = np.where(v, p + (a * profile.p_idle_unit
-                             + a * duty * profile.p_calc_unit), p)
+                             + a * duty_all[:, t] * profile.p_calc_unit), p)
 
-    drain = np.maximum(1.0, np.maximum(0, n_out_last - 1) * sigmas[ar, last]
-                       + l_over_a[ar, last])
-    bottleneck = np.max(
-        np.where(costs.valid, l_over_a * costs.n_out, -np.inf), axis=1)
-    thr = profile.f_clk / np.maximum(bottleneck, drain)
+    thr = profile.f_clk / interval
 
     e = t_s * p  # Eq. 4
+    if shared is not None:
+        params_tot, macs_tot = shared.param_totals, shared.mac_totals
+    else:
+        params_tot = np.where(costs.valid, costs.params, 0).sum(axis=1)
+        macs_tot = np.where(costs.valid, costs.total_macs, 0).sum(axis=1)
     return BatchHwEstimate(
         t_total_s=t_s,
         latency_s=t_lat / profile.f_clk,
@@ -510,8 +709,8 @@ def batch_estimate(costs: LayerCostArrays, *, strategy: str = "min",
         e_total_j=e,
         e_wall_j=(p + profile.p_board) * t_s,
         throughput_sps=thr,
-        params=np.where(costs.valid, costs.params, 0).sum(axis=1),
-        total_macs=np.where(costs.valid, costs.total_macs, 0).sum(axis=1),
+        params=params_tot,
+        total_macs=macs_tot,
         alphas=alphas,
         valid=costs.valid,
     )

@@ -8,29 +8,34 @@ Pareto frontier."
 Cheap objectives (no training needed) come from the analytic hardware models
 of :mod:`repro.core.hw_model`; expensive objectives (detection / false-alarm
 rate) require candidate training.  All values are oriented for MINIMIZATION.
+
+Column layout is described by an
+:class:`~repro.core.objective_schema.ObjectiveSchema` (DESIGN.md §10): a
+single-platform backend yields the classic 7-column ``CHEAP_NAMES`` matrix,
+a :class:`~repro.core.cost_backend.MultiPlatformBackend` a ``K*7``-column
+one with per-platform groups.  The canonical names live in
+:mod:`repro.core.objective_schema` and are re-exported here.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core.cost_backend import BackendSpec, get_backend
+from repro.core.cost_backend import BackendSpec, backend_schema, get_backend
 from repro.core.genome import Genome, PopulationEncoding
 from repro.core.hw_model import FPGA_ZU, HardwareProfile, estimate
+from repro.core.objective_schema import (  # noqa: F401  (re-exports)
+    ALL_NAMES,
+    CHEAP_NAMES,
+    Constraints,
+    EXPENSIVE_NAMES,
+    LEGACY_CHEAP_SCHEMA,
+    ObjectiveSchema,
+)
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
 from repro.core.trainer import TrainResult
-
-# canonical ordering of the 9 paper objectives
-CHEAP_NAMES: Tuple[str, ...] = (
-    "power_min_alpha_w", "power_max_alpha_w",
-    "energy_min_alpha_j", "energy_max_alpha_j",
-    "latency_min_alpha_s", "latency_max_alpha_s",
-    "n_params",
-)
-EXPENSIVE_NAMES: Tuple[str, ...] = ("miss_rate", "false_alarm_rate")
-ALL_NAMES: Tuple[str, ...] = CHEAP_NAMES + EXPENSIVE_NAMES
 
 
 def cheap_objectives(g: Genome, *, profile: HardwareProfile = FPGA_ZU,
@@ -56,7 +61,8 @@ def cheap_objectives_batch(
     profile: HardwareProfile = FPGA_ZU,
     space: SearchSpace = DEFAULT_SPACE,
 ) -> np.ndarray:
-    """Batched :func:`cheap_objectives`: ``(N, 7)`` in ``CHEAP_NAMES`` order.
+    """Batched :func:`cheap_objectives`: ``(N, C)`` in backend-schema order
+    (``C = 7`` for a single platform, ``K*7`` for a multi-platform backend).
 
     ``genomes`` is a sequence of :class:`Genome` or a ready
     :class:`PopulationEncoding`.  Evaluation routes through a pluggable
@@ -64,11 +70,11 @@ def cheap_objectives_batch(
     Eq. 1-4 analytic backend for ``profile`` (bit-for-bit consistent with the
     scalar path — this is the search's hot loop, DESIGN.md §2).
     """
+    be = get_backend(profile if backend is None else backend)
     if not isinstance(genomes, PopulationEncoding):
         if len(genomes) == 0:
-            return np.zeros((0, len(CHEAP_NAMES)), dtype=np.float64)
+            return np.zeros((0, len(backend_schema(be))), dtype=np.float64)
         genomes = PopulationEncoding.from_genomes(list(genomes))
-    be = get_backend(profile if backend is None else backend)
     return be.evaluate_batch(genomes, space=space)
 
 
@@ -101,12 +107,15 @@ class Candidate:
     def trained(self) -> bool:
         return self.expensive is not None
 
-    def meets_constraints(self, det_min: float = 0.90, fa_max: float = 0.20
-                          ) -> bool:
+    def meets_constraints(self,
+                          det_min: Union[None, float, Constraints] = None,
+                          fa_max: Optional[float] = None) -> bool:
+        """Hard acceptance limits; pass a :class:`Constraints` or the
+        legacy ``(det_min, fa_max)`` floats (default: paper limits)."""
         if self.expensive is None:
             return False
-        return (1.0 - self.expensive[0]) >= det_min and \
-            self.expensive[1] <= fa_max
+        return bool(Constraints.coerce(det_min, fa_max)
+                    .ok_rows(self.expensive[None, :])[0])
 
 
 def objective_matrix(pop: Sequence[Candidate]) -> np.ndarray:
@@ -133,40 +142,62 @@ class PopulationArrays:
     (training dispatch, checkpoints, reports).  ``expensive`` rows are NaN
     until the member is trained; :meth:`objective_matrix` substitutes the
     pessimistic placeholder exactly like ``Candidate.objective_vector``.
+
+    ``schema`` names the cheap columns (platform-tagged for multi-platform
+    backends); ``None`` means the legacy single-platform 7-column layout.
     """
 
     enc: "PopulationEncoding"
-    cheap: np.ndarray       # (N, 7) float64 — CHEAP_NAMES order
+    cheap: np.ndarray       # (N, C) float64 — cheap-schema column order
     expensive: np.ndarray   # (N, 2) float64 — NaN rows = untrained
     phash: np.ndarray       # (N,) object — phenotype-hash dedup keys
     born: np.ndarray        # (N,) int64 — generation each member was created
+    schema: Optional[ObjectiveSchema] = None   # cheap columns; None = legacy
 
     def __len__(self) -> int:
         return len(self.enc)
+
+    @property
+    def cheap_schema(self) -> ObjectiveSchema:
+        """The cheap-column schema (legacy 7-column layout when unset)."""
+        if self.schema is not None:
+            return self.schema
+        if self.cheap.shape[1] == len(LEGACY_CHEAP_SCHEMA):
+            return LEGACY_CHEAP_SCHEMA
+        raise ValueError(
+            f"schema-less cheap matrix with {self.cheap.shape[1]} columns "
+            f"(legacy layout has {len(LEGACY_CHEAP_SCHEMA)})")
+
+    @property
+    def full_schema(self) -> ObjectiveSchema:
+        """Cheap + expensive columns — :meth:`objective_matrix`'s layout."""
+        return self.cheap_schema.with_expensive()
 
     @property
     def trained_mask(self) -> np.ndarray:
         return np.isfinite(self.expensive).all(axis=1)
 
     def objective_matrix(self) -> np.ndarray:
-        """(N, 9) full objective matrix, pessimistic where untrained."""
+        """(N, C+2) full objective matrix (``full_schema`` column order),
+        pessimistic where untrained."""
         exp = np.where(np.isfinite(self.expensive), self.expensive,
                        PESSIMISTIC_EXPENSIVE[None, :])
         return np.concatenate([self.cheap, exp], axis=1)
 
-    def feasible_mask(self, det_min: float = 0.90, fa_max: float = 0.20
-                      ) -> np.ndarray:
-        """Vectorized ``Candidate.meets_constraints`` (untrained = False)."""
-        return (self.trained_mask
-                & ((1.0 - self.expensive[:, 0]) >= det_min)
-                & (self.expensive[:, 1] <= fa_max))
+    def feasible_mask(self,
+                      det_min: Union[None, float, Constraints] = None,
+                      fa_max: Optional[float] = None) -> np.ndarray:
+        """Vectorized ``Candidate.meets_constraints`` (untrained = False).
+        Pass a :class:`Constraints` or the legacy float pair."""
+        cons = Constraints.coerce(det_min, fa_max)
+        return self.trained_mask & cons.ok_rows(self.expensive)
 
     def take(self, idx) -> "PopulationArrays":
         idx = np.asarray(idx)
         return PopulationArrays(
             enc=self.enc.take(idx), cheap=self.cheap[idx],
             expensive=self.expensive[idx], phash=self.phash[idx],
-            born=self.born[idx])
+            born=self.born[idx], schema=self.schema)
 
     @classmethod
     def concat(cls, parts: Sequence["PopulationArrays"]
@@ -179,7 +210,8 @@ class PopulationArrays:
             cheap=np.concatenate([p.cheap for p in parts]),
             expensive=np.concatenate([p.expensive for p in parts]),
             phash=np.concatenate([p.phash for p in parts]),
-            born=np.concatenate([p.born for p in parts]))
+            born=np.concatenate([p.born for p in parts]),
+            schema=parts[0].schema)
 
     # ------------------------------------------------------- object edges
     def candidate(self, i: int) -> Candidate:
@@ -194,7 +226,8 @@ class PopulationArrays:
         return [self.candidate(i) for i in range(len(self))]
 
     @classmethod
-    def from_candidates(cls, cands: Sequence[Candidate]
+    def from_candidates(cls, cands: Sequence[Candidate],
+                        schema: Optional[ObjectiveSchema] = None
                         ) -> "PopulationArrays":
         exp = np.full((len(cands), len(EXPENSIVE_NAMES)), np.nan)
         for i, c in enumerate(cands):
@@ -205,4 +238,5 @@ class PopulationArrays:
             cheap=np.stack([np.asarray(c.cheap, np.float64) for c in cands]),
             expensive=exp,
             phash=np.asarray([c.phash for c in cands], dtype=object),
-            born=np.asarray([c.generation for c in cands], dtype=np.int64))
+            born=np.asarray([c.generation for c in cands], dtype=np.int64),
+            schema=schema)

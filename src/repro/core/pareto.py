@@ -74,6 +74,46 @@ def domination_matrix(points: np.ndarray, row_chunk: int = 256) -> np.ndarray:
     return dom
 
 
+def domination_matrices(points: np.ndarray,
+                        col_groups: Sequence[Sequence[int]],
+                        row_chunk: int = 256) -> List[np.ndarray]:
+    """Domination matrices for several objective-column subsets in one pass.
+
+    ``out[g][i, j]`` = point i dominates point j *restricted to columns
+    ``col_groups[g]``* — the objective-subset views behind per-platform and
+    goal-conditioned Pareto fronts.  The per-column ``<=`` / ``<``
+    comparison blocks are computed once per row chunk and folded into every
+    group containing the column, so K subset matrices cost one matrix's
+    worth of comparisons plus K cheap boolean folds (instead of K full
+    :func:`domination_matrix` passes).
+    """
+    points = np.asarray(points, dtype=np.float64)
+    n, _ = points.shape
+    groups = [np.asarray(g, dtype=np.int64) for g in col_groups]
+    if any(len(g) == 0 for g in groups):
+        raise ValueError("empty objective-column group")
+    needed = sorted({int(c) for g in groups for c in g})
+    cols = {k: np.ascontiguousarray(points[:, k]) for k in needed}
+    doms = [np.empty((n, n), dtype=bool) for _ in groups]
+    for s in range(0, n, row_chunk):
+        e = min(n, s + row_chunk)
+        le_blk: dict = {}
+        lt_blk: dict = {}
+        for k in needed:
+            c = cols[k]
+            blk = c[s:e, None]
+            le_blk[k] = blk <= c[None, :]
+            lt_blk[k] = blk < c[None, :]
+        for g, dom in zip(groups, doms):
+            le = np.ones((e - s, n), dtype=bool)
+            lt = np.zeros((e - s, n), dtype=bool)
+            for k in g:
+                le &= le_blk[int(k)]
+                lt |= lt_blk[int(k)]
+            dom[s:e] = le & lt
+    return doms
+
+
 def _peel_fronts(dom: np.ndarray):
     """Yield fronts from a domination matrix (Deb peeling, vectorized).
 

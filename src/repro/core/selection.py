@@ -68,9 +68,20 @@ class GaussianKDE:
 
 
 def inverse_density_weights(pop_cheap: np.ndarray,
-                            query_cheap: Optional[np.ndarray] = None
+                            query_cheap: Optional[np.ndarray] = None,
+                            cols: Optional[np.ndarray] = None
                             ) -> np.ndarray:
-    """Normalized sampling weights ∝ 1/KDE-density in cheap-objective space."""
+    """Normalized sampling weights ∝ 1/KDE-density in cheap-objective space.
+
+    ``cols`` restricts the KDE to an objective-column subset (a
+    goal-conditioned view of the schema-shaped cheap matrix): density — and
+    therefore exploration pressure — is then measured only along the
+    deployment goal's objectives.  ``None`` keeps the full space.
+    """
+    if cols is not None:
+        pop_cheap = pop_cheap[:, cols]
+        if query_cheap is not None:
+            query_cheap = query_cheap[:, cols]
     pop_n = normalize(pop_cheap)
     kde = GaussianKDE(pop_n)
     if query_cheap is None:
@@ -90,19 +101,22 @@ def inverse_density_weights(pop_cheap: np.ndarray,
 
 
 def sample_parents(rng: np.random.Generator, pop_cheap: np.ndarray,
-                   n: int) -> np.ndarray:
-    """Indices of `n` parents sampled inverse-density (with replacement)."""
-    w = inverse_density_weights(pop_cheap)
+                   n: int, cols: Optional[np.ndarray] = None) -> np.ndarray:
+    """Indices of `n` parents sampled inverse-density (with replacement).
+    ``cols`` = goal-conditioned objective subset (None = all columns)."""
+    w = inverse_density_weights(pop_cheap, cols=cols)
     return rng.choice(len(pop_cheap), size=n, replace=True, p=w)
 
 
 def preselect_children(rng: np.random.Generator, pop_cheap: np.ndarray,
-                       child_cheap: np.ndarray, n_accept: int) -> np.ndarray:
+                       child_cheap: np.ndarray, n_accept: int,
+                       cols: Optional[np.ndarray] = None) -> np.ndarray:
     """Step 2: pick children for expensive evaluation, inverse-density
-    weighted against the *current population's* cheap-objective KDE."""
+    weighted against the *current population's* cheap-objective KDE.
+    ``cols`` = goal-conditioned objective subset (None = all columns)."""
     if len(child_cheap) <= n_accept:
         return np.arange(len(child_cheap))
-    w = inverse_density_weights(pop_cheap, child_cheap)
+    w = inverse_density_weights(pop_cheap, child_cheap, cols=cols)
     if not np.all(np.isfinite(w)) or w.sum() <= 0:
         return rng.choice(len(child_cheap), size=n_accept, replace=False)
     return rng.choice(len(child_cheap), size=n_accept, replace=False, p=w)

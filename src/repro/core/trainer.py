@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.genome import Genome
+from repro.core.objective_schema import Constraints
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
 from repro.hwlib.layers import LayerSpec, apply_layer, init_layer
 from repro.hwlib.quant import QuantConfig, fake_quant, quantize_layer_params
@@ -29,9 +30,12 @@ class TrainResult:
     val_loss: float
     steps: int
 
-    def meets_constraints(self, det_min: float = 0.90,
-                          fa_max: float = 0.20) -> bool:
-        return self.detection_rate >= det_min and self.false_alarm_rate <= fa_max
+    def meets_constraints(self, det_min=None, fa_max=None) -> bool:
+        """Paper's hard limits; accepts a
+        :class:`~repro.core.objective_schema.Constraints` or the legacy
+        ``(det_min, fa_max)`` float pair."""
+        return Constraints.coerce(det_min, fa_max).ok(
+            self.detection_rate, self.false_alarm_rate)
 
 
 def init_candidate(rng: jax.Array, specs: Sequence[LayerSpec], in_ch: int = 2

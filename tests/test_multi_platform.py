@@ -1,0 +1,290 @@
+"""Multi-platform scoring pipeline + goal-conditioned selection.
+
+Two contracts (ISSUE 5 acceptance):
+
+* a single-backend ``MultiPlatformBackend([fpga_zu])`` reproduces the PR-1
+  engine's ``(N, 7)`` matrix bit-for-bit and an identical search trajectory
+  / Pareto fronts under fixed seeds (the shared-context evaluation path
+  changes no floats);
+* a seeded multi-platform search yields per-platform and cross-platform
+  Pareto fronts, and the paper's three design-goal presets select distinct
+  front members on the same seed.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.cost_backend import (
+    FPGAAnalyticBackend,
+    MultiPlatformBackend,
+    TPURooflineBackend,
+    get_backend,
+)
+from repro.core.evolution import EvolutionarySearch, NASConfig
+from repro.core.genome import PopulationEncoding, random_genome
+from repro.core.hw_model import (
+    FPGA_ZCU102,
+    FPGA_ZU,
+    PROFILES,
+    SharedPopulationEval,
+    batch_resolve_alphas,
+    population_layer_costs,
+)
+from repro.core.objective_schema import CHEAP_NAMES, GOALS
+from repro.core.pareto import pareto_front
+from repro.core.search_space import DEFAULT_SPACE
+from repro.core.trainer import TrainResult
+
+N_SWEEP = 160
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    rng = np.random.default_rng(7)
+    genomes = [random_genome(rng, DEFAULT_SPACE) for _ in range(N_SWEEP)]
+    return PopulationEncoding.from_genomes(genomes)
+
+
+def _mock_train(g):
+    det = min(0.99, 0.75 + 0.04 * g.depth())
+    return TrainResult(detection_rate=det,
+                       false_alarm_rate=max(0.0, 0.25 - 0.03 * g.depth()),
+                       val_loss=0.3, steps=0)
+
+
+def _search(**kw):
+    kw = {"generations": 4, "children_per_gen": 10, "n_accept": 5,
+          "init_population": 8, "n_workers": 2, "seed": 0, **kw}
+    cfg = NASConfig(**kw)
+    return EvolutionarySearch(cfg, None, None, train_fn=_mock_train,
+                              log=lambda *_: None)
+
+
+# ------------------------------------------------------- backend-level parity
+
+def test_single_member_composite_is_bit_identical(sweep):
+    """MultiPlatformBackend([fpga_zu]) == the PR-1 engine, exactly."""
+    ref = FPGAAnalyticBackend(FPGA_ZU).evaluate_batch(sweep)
+    multi = MultiPlatformBackend(["fpga_zu"])
+    got = multi.evaluate_batch(sweep)
+    assert got.shape == (len(sweep), len(CHEAP_NAMES))
+    assert np.array_equal(got, ref)
+    assert multi.schema.names == CHEAP_NAMES
+    assert multi.schema.platforms == ("fpga_zu",)
+
+
+def test_composite_columns_match_members_evaluated_alone(sweep):
+    """Every member's column block is bit-identical to that backend run
+    standalone — the shared decode/tabulation changes no floats."""
+    members = ["fpga_zu", "fpga_zcu102", "tpu_roofline"]
+    multi = MultiPlatformBackend(members)
+    got = multi.evaluate_batch(sweep)
+    assert got.shape == (len(sweep), 3 * len(CHEAP_NAMES))
+    for k, name in enumerate(members):
+        alone = get_backend(name).evaluate_batch(sweep)
+        block = got[:, k * len(CHEAP_NAMES):(k + 1) * len(CHEAP_NAMES)]
+        assert np.array_equal(block, alone), name
+    # schema column groups line up with the blocks
+    for k, platform in enumerate(multi.schema.platforms):
+        idx = multi.schema.indices(platform=platform)
+        np.testing.assert_array_equal(
+            idx, np.arange(k * 7, (k + 1) * 7))
+
+
+def test_alpha_event_table_parity_all_profiles_and_tight_caps(sweep):
+    """The shared α event-table path must produce the binary-search path's
+    factors exactly, including budget-boundary and negative-budget cases."""
+    costs = population_layer_costs(sweep, DEFAULT_SPACE)
+    ev = SharedPopulationEval(costs).alpha_events
+    for profile in PROFILES.values():
+        a = batch_resolve_alphas(costs, "max", profile)
+        b = batch_resolve_alphas(costs, "max", profile, events=ev)
+        assert np.array_equal(a, b), profile.name
+    for cap in (8, 24, 100, 513):
+        tight = dataclasses.replace(FPGA_ZU, alpha_cap=cap)
+        a = batch_resolve_alphas(costs, "max", tight)
+        b = batch_resolve_alphas(costs, "max", tight, events=ev)
+        assert np.array_equal(a, b), cap
+
+
+def test_nested_composites_flatten_and_duplicates_rejected():
+    multi = MultiPlatformBackend(
+        [MultiPlatformBackend(["fpga_zu"]), "tpu_roofline"])
+    assert multi.schema.platforms == ("fpga_zu", "tpu_roofline")
+    with pytest.raises(ValueError):
+        MultiPlatformBackend(["fpga_zu", "fpga_zu"])
+    with pytest.raises(ValueError):
+        MultiPlatformBackend([])
+
+
+def test_get_backend_resolves_sequences():
+    be = get_backend(["fpga_zu", FPGA_ZCU102, TPURooflineBackend()])
+    assert isinstance(be, MultiPlatformBackend)
+    assert be.schema.platforms == ("fpga_zu", "fpga_zcu102", "tpu_roofline")
+
+
+def test_composite_accepts_bare_protocol_members(sweep):
+    """A third-party backend implementing only the documented protocol
+    signature (no shared= kwarg) must work inside a composite."""
+
+    class BareBackend:
+        name = "bare"
+        platform = "bare"
+
+        def evaluate_batch(self, enc, *, space=DEFAULT_SPACE):
+            return np.ones((len(enc), 7))
+
+        def evaluate(self, g, *, space=DEFAULT_SPACE):
+            return np.ones(7)
+
+    multi = MultiPlatformBackend(["fpga_zu", BareBackend()])
+    got = multi.evaluate_batch(sweep)
+    assert got.shape == (len(sweep), 14)
+    assert np.array_equal(got[:, 7:], np.ones((len(sweep), 7)))
+    assert multi.schema.platforms == ("fpga_zu", "bare")
+
+
+# ------------------------------------------------------ search-level parity
+
+def test_single_backend_search_trajectory_is_bit_identical():
+    """backends=[fpga_zu] must reproduce the default engine's whole
+    trajectory: same phenotypes, same cheap matrices, same fronts."""
+    ref = _search()
+    ref_state = ref.run()
+    multi = _search(backends=["fpga_zu"])
+    got_state = multi.run()
+    assert list(got_state.pop.phash) == list(ref_state.pop.phash)
+    np.testing.assert_array_equal(got_state.pop.cheap, ref_state.pop.cheap)
+    np.testing.assert_array_equal(got_state.pop.expensive,
+                                  ref_state.pop.expensive)
+    ref_front = pareto_front(ref_state.pop.objective_matrix())
+    got_front = pareto_front(got_state.pop.objective_matrix())
+    np.testing.assert_array_equal(ref_front, got_front)
+    # end-of-run RNG streams identical -> later generations stay aligned
+    assert multi.rng.bit_generator.state == ref.rng.bit_generator.state
+
+
+# ------------------------------------------------- multi-platform search e2e
+
+@pytest.fixture(scope="module")
+def multi_state():
+    s = _search(backends=["fpga_zu", "fpga_zcu102", "tpu_roofline"])
+    return s, s.run()
+
+
+def test_multi_platform_population_is_schema_shaped(multi_state):
+    s, state = multi_state
+    assert state.pop.cheap.shape[1] == 3 * len(CHEAP_NAMES)
+    assert state.pop.cheap_schema is s.schema
+    assert state.pop.objective_matrix().shape[1] == 3 * len(CHEAP_NAMES) + 2
+    # resident cheap matrix agrees with a fresh composite evaluation
+    np.testing.assert_array_equal(
+        state.pop.cheap, s.backend.evaluate_batch(state.pop.enc,
+                                                  space=s.space))
+
+
+def test_per_platform_and_cross_platform_fronts(multi_state):
+    s, state = multi_state
+    fronts = s.pareto_fronts(state)
+    assert set(fronts) == {"cross_platform", "fpga_zu", "fpga_zcu102",
+                           "tpu_roofline"}
+    objs = state.pop.objective_matrix()
+    # cross-platform front == front over the full matrix
+    np.testing.assert_array_equal(fronts["cross_platform"],
+                                  pareto_front(objs))
+    full = s.full_schema
+    for platform in s.schema.platforms:
+        cols = full.platform_group(platform)
+        np.testing.assert_array_equal(fronts[platform],
+                                      pareto_front(objs[:, cols]))
+        # restricting objectives can only shrink the front
+        assert set(fronts[platform]) <= set(fronts["cross_platform"])
+        assert len(fronts[platform]) >= 1
+
+
+def test_goal_presets_select_distinct_members(multi_state):
+    """Paper §VI-B: the same searched population serves low-energy,
+    low-power and high-throughput deployments — with different picks."""
+    s, state = multi_state
+    picks = {name: s.select_for_goal(state, name)
+             for name in ("low_energy", "low_power", "high_throughput")}
+    assert all(c is not None for c in picks.values())
+    hashes = [c.phash for c in picks.values()]
+    assert len(set(hashes)) == 3, hashes
+    # every pick satisfies the effective constraints
+    for c in picks.values():
+        assert c.meets_constraints(s.constraints)
+
+
+def test_select_solution_needs_platform_in_multi_schema(multi_state):
+    s, state = multi_state
+    with pytest.raises(KeyError):
+        s.select_solution(state, "energy_max_alpha_j")  # ambiguous
+    a = s.select_solution(state, "energy_max_alpha_j", platform="fpga_zu")
+    b = s.select_solution(state, "fpga_zcu102:energy_max_alpha_j")
+    assert a is not None and b is not None
+
+
+# --------------------------------------------------- goal-conditioned smoke
+
+@pytest.mark.parametrize("goal", ["balanced", "low_energy", "low_power",
+                                  "high_throughput"])
+def test_goal_preset_end_to_end_smoke(goal):
+    """Seeded end-to-end run per preset: the search must drive selection
+    through the goal's column subset and still produce a valid state."""
+    s = _search(goal=goal, seed=11)
+    state = s.run()
+    assert state.generation == 4
+    assert len(state.pop) <= s.cfg.population_cap
+    assert len(state.history) == 4
+    assert np.isfinite(state.pop.cheap).all()
+    sol = s.select_for_goal(state)
+    if sol is not None:
+        assert sol.meets_constraints(s.constraints)
+    cols = GOALS[goal].selection_indices(s.full_schema)
+    fronts = pareto_front(state.pop.objective_matrix()[:, cols])
+    assert len(fronts) >= 1
+
+
+# ------------------------------------------------------------- checkpoints
+
+def test_checkpoint_round_trip_multi_platform(tmp_path):
+    s = _search(backends=["fpga_zu", "tpu_roofline"])
+    state = s.init_state()
+    state = s.step(state)
+    path = str(tmp_path / "nas.json")
+    s.save_state(state, path)
+    restored = _search(backends=["fpga_zu", "tpu_roofline"]) \
+        .load_state(path)
+    np.testing.assert_array_equal(restored.pop.cheap, state.pop.cheap)
+    assert restored.pop.cheap_schema == s.schema
+
+
+def test_checkpoint_schema_mismatch_raises(tmp_path):
+    s = _search(backends=["fpga_zu", "tpu_roofline"])
+    state = s.init_state()
+    path = str(tmp_path / "nas.json")
+    s.save_state(state, path)
+    with pytest.raises(ValueError, match="schema"):
+        _search(backends=["fpga_zu", "fpga_zcu102"]).load_state(path)
+    with pytest.raises(ValueError, match="schema"):
+        _search().load_state(path)   # single-platform driver
+
+
+def test_multi_platform_resume_is_bit_reproducible(tmp_path):
+    kw = dict(backends=["fpga_zu", "fpga_zcu102"], goal="low_energy")
+    ref_search = _search(**kw)
+    ref = ref_search.init_state()
+    for _ in range(4):
+        ref = ref_search.step(ref)
+    path = str(tmp_path / "nas.json")
+    pre = _search(**kw)
+    state = pre.init_state()
+    for _ in range(2):
+        state = pre.step(state)
+        pre.save_state(state, path)
+    resumed = _search(**kw).run_resumable(path, generations=4)
+    assert list(resumed.pop.phash) == list(ref.pop.phash)
+    np.testing.assert_array_equal(resumed.pop.cheap, ref.pop.cheap)
+    np.testing.assert_array_equal(resumed.pop.expensive, ref.pop.expensive)

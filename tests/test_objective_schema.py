@@ -1,0 +1,200 @@
+"""ObjectiveSchema / Constraints / DesignGoal unit tests (DESIGN.md §10)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.objective_schema import (
+    ALL_NAMES,
+    CHEAP_NAMES,
+    EXPENSIVE_NAMES,
+    GOALS,
+    Constraints,
+    DesignGoal,
+    ObjectiveColumn,
+    ObjectiveSchema,
+    get_goal,
+)
+
+
+# ------------------------------------------------------------------ schema
+
+def two_platform_schema():
+    return ObjectiveSchema.concat([ObjectiveSchema.cheap("fpga_zu"),
+                                   ObjectiveSchema.cheap("tpu_roofline")])
+
+
+def test_cheap_schema_matches_canonical_names():
+    s = ObjectiveSchema.cheap("fpga_zu")
+    assert s.names == CHEAP_NAMES
+    assert s.platforms == ("fpga_zu",)
+    assert all(c.kind == "cheap" for c in s)
+    assert s.qualified_names[0] == "fpga_zu:power_min_alpha_w"
+
+
+def test_with_expensive_appends_platform_agnostic_columns():
+    full = ObjectiveSchema.cheap("fpga_zu").with_expensive()
+    assert full.names == ALL_NAMES
+    assert [full.columns[i].name for i in full.expensive_indices()] \
+        == list(EXPENSIVE_NAMES)
+    # agnostic columns keep bare qualified names
+    assert full.qualified_names[-1] == "false_alarm_rate"
+
+
+def test_index_unqualified_qualified_and_platform_kw():
+    s = two_platform_schema()
+    assert s.index("tpu_roofline:n_params") == 7 + CHEAP_NAMES.index("n_params")
+    assert s.index("n_params", platform="fpga_zu") \
+        == CHEAP_NAMES.index("n_params")
+    with pytest.raises(KeyError):       # ambiguous across platforms
+        s.index("n_params")
+    with pytest.raises(KeyError):       # unknown name
+        s.index("no_such_objective")
+
+
+def test_platform_group_and_platforms():
+    full = two_platform_schema().with_expensive()
+    assert full.platforms == ("fpga_zu", "tpu_roofline")
+    grp = full.platform_group("tpu_roofline")
+    # 7 cheap columns of the platform + the 2 agnostic expensive columns
+    assert len(grp) == 9
+    assert [full.columns[i].platform for i in grp] \
+        == ["tpu_roofline"] * 7 + ["", ""]
+    with pytest.raises(KeyError):
+        full.platform_group("no_such_platform")
+
+
+def test_duplicate_platform_columns_rejected():
+    with pytest.raises(ValueError):
+        ObjectiveSchema.concat([ObjectiveSchema.cheap("fpga_zu"),
+                                ObjectiveSchema.cheap("fpga_zu")])
+
+
+def test_json_round_trip():
+    full = two_platform_schema().with_expensive()
+    assert ObjectiveSchema.from_json(full.to_json()) == full
+
+
+def test_bad_column_kind_rejected():
+    with pytest.raises(ValueError):
+        ObjectiveColumn("x", "weird")
+
+
+# -------------------------------------------------------------- constraints
+
+def test_constraints_coerce_paths():
+    c = Constraints(0.8, 0.3)
+    assert Constraints.coerce(c) is c
+    assert Constraints.coerce(0.8, 0.3) == c
+    assert Constraints.coerce() == Constraints(0.90, 0.20)  # paper defaults
+    assert Constraints.coerce(0.8) == Constraints(0.8, 0.20)
+
+
+def test_constraints_unify_the_three_consumers():
+    """One Constraints object must drive TrainResult, Candidate and
+    PopulationArrays feasibility identically."""
+    from repro.core.objectives import Candidate, PopulationArrays
+    from repro.core.trainer import TrainResult
+
+    cons = Constraints(det_min=0.85, fa_max=0.25)
+    cases = [(0.9, 0.1, True), (0.85, 0.25, True),
+             (0.84, 0.1, False), (0.9, 0.26, False)]
+    for det, fa, expect in cases:
+        tr = TrainResult(detection_rate=det, false_alarm_rate=fa,
+                         val_loss=0.0, steps=0)
+        assert tr.meets_constraints(cons) is expect
+        assert tr.meets_constraints(cons.det_min, cons.fa_max) is expect
+        cand = Candidate(genome=None, cheap=np.zeros(7),
+                         expensive=np.asarray([1.0 - det, fa]))
+        assert cand.meets_constraints(cons) is expect
+    exp = np.asarray([[1.0 - det, fa] for det, fa, _ in cases])
+    pop = PopulationArrays(
+        enc=_tiny_enc(len(cases)), cheap=np.zeros((len(cases), 7)),
+        expensive=exp, phash=np.asarray([str(i) for i in range(len(cases))],
+                                        dtype=object),
+        born=np.zeros(len(cases), dtype=np.int64))
+    np.testing.assert_array_equal(pop.feasible_mask(cons),
+                                  [c[2] for c in cases])
+    # legacy float-pair call sites still work
+    np.testing.assert_array_equal(pop.feasible_mask(0.85, 0.25),
+                                  [c[2] for c in cases])
+
+
+def _tiny_enc(n):
+    from repro.core.genome import PopulationEncoding, random_genome
+    rng = np.random.default_rng(0)
+    from repro.core.search_space import DEFAULT_SPACE
+    return PopulationEncoding.from_genomes(
+        [random_genome(rng, DEFAULT_SPACE) for _ in range(n)])
+
+
+def test_untrained_rows_are_infeasible():
+    from repro.core.objectives import PopulationArrays
+    pop = PopulationArrays(
+        enc=_tiny_enc(2), cheap=np.zeros((2, 7)),
+        expensive=np.asarray([[np.nan, np.nan], [0.0, 0.0]]),
+        phash=np.asarray(["a", "b"], dtype=object),
+        born=np.zeros(2, dtype=np.int64))
+    np.testing.assert_array_equal(pop.feasible_mask(Constraints()),
+                                  [False, True])
+
+
+# -------------------------------------------------------------------- goals
+
+def test_goal_presets_exist_and_resolve():
+    for name in ("balanced", "low_energy", "low_power", "high_throughput"):
+        g = get_goal(name)
+        assert g.name == name
+        assert get_goal(g) is g
+    with pytest.raises(KeyError):
+        get_goal("no_such_goal")
+
+
+def test_balanced_goal_selects_every_column():
+    full = two_platform_schema().with_expensive()
+    np.testing.assert_array_equal(
+        GOALS["balanced"].selection_indices(full), np.arange(len(full)))
+
+
+def test_goal_selection_keeps_expensive_columns():
+    full = two_platform_schema().with_expensive()
+    for name in ("low_energy", "low_power", "high_throughput"):
+        cols = GOALS[name].selection_indices(full)
+        assert set(full.expensive_indices().tolist()) <= set(cols.tolist())
+        picked = {full.columns[i].name for i in cols}
+        assert set(GOALS[name].objectives) <= picked
+
+
+def test_goal_platform_restriction():
+    full = two_platform_schema().with_expensive()
+    g = dataclasses.replace(GOALS["low_energy"], platforms=("tpu_roofline",))
+    cols = g.selection_indices(full)
+    cheap_cols = [i for i in cols if full.columns[i].kind == "cheap"]
+    assert all(full.columns[i].platform == "tpu_roofline"
+               for i in cheap_cols)
+    # primary column once per platform in scope
+    assert len(g.primary_indices(full)) == 1
+    assert len(GOALS["low_energy"].primary_indices(full)) == 2
+
+
+def test_goal_with_unknown_objective_raises():
+    full = ObjectiveSchema.cheap("fpga_zu").with_expensive()
+    g = DesignGoal(name="bad", objectives=("nonexistent",))
+    with pytest.raises(KeyError):
+        g.selection_indices(full)
+    # a typo'd name must raise even when other names match — silently
+    # dropping an axis would steer the whole search wrong
+    g2 = DesignGoal(name="typo", objectives=("energy_max_alpha_j",
+                                             "latency_max_alpa_s"))
+    with pytest.raises(KeyError, match="latency_max_alpa_s"):
+        g2.selection_indices(full)
+    g3 = DesignGoal(name="badplat", platforms=("no_such_platform",))
+    with pytest.raises(KeyError, match="no_such_platform"):
+        g3.selection_indices(full)
+
+
+def test_goal_constraint_inheritance():
+    fallback = Constraints(0.7, 0.3)
+    assert GOALS["low_energy"].effective_constraints(fallback) == fallback
+    g = DesignGoal(name="strict", constraints=Constraints(0.95, 0.05))
+    assert g.effective_constraints(fallback) == Constraints(0.95, 0.05)

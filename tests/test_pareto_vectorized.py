@@ -61,3 +61,18 @@ def test_domination_matrix_chunking_and_semantics():
     for i in range(len(pts)):
         for j in range(len(pts)):
             assert dom[i, j] == dominates(pts[i], pts[j])
+
+
+def test_domination_matrices_subset_views_match_direct():
+    """The shared-pass subset matrices (multi-platform / goal-conditioned
+    fronts) must equal a direct domination_matrix over the sliced points."""
+    from repro.core.pareto import domination_matrices
+    rng = np.random.default_rng(3)
+    pts = rng.normal(size=(70, 9))
+    groups = [np.arange(9), np.asarray([0, 3, 5]), np.asarray([7, 8]),
+              np.asarray([2])]
+    doms = domination_matrices(pts, groups, row_chunk=16)
+    for g, dom in zip(groups, doms):
+        np.testing.assert_array_equal(dom, domination_matrix(pts[:, g]))
+    with pytest.raises(ValueError):
+        domination_matrices(pts, [np.arange(9), np.asarray([], np.int64)])

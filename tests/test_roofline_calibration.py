@@ -1,0 +1,110 @@
+"""TPURooflineBackend calibration sanity against measured dry-run cells.
+
+The ROADMAP flags the genome-scoring roofline as uncalibrated against the
+measured path (``launch/dryrun.py`` compiles real cells and derives roofline
+terms from partitioned HLO).  Both paths route through the *same*
+``TPU_ROOFLINE.roofline_terms`` helper, so calibration drift can only enter
+through (a) the hardware constants and (b) each path's raw FLOP/byte
+quantities.  This gate checks both:
+
+* always: the genome-scoring columns of :class:`TPURooflineBackend` are
+  self-consistent with ``roofline_terms`` applied to the genome's own
+  FLOP/byte totals (the scoring path cannot silently fork the constants);
+* when measured cells exist (``results/*.jsonl`` from a dry-run sweep):
+  re-deriving every recorded cell's terms from its raw per-device
+  quantities must reproduce the recorded ``compute_s / memory_s /
+  collective_s`` within tolerance — if the shared constants move, the
+  recorded cells catch it.  Skips (does not pass vacuously) when no sweep
+  has been run on this checkout.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cost_backend import TPU_ROOFLINE, TPURooflineBackend
+from repro.core.genome import PopulationEncoding, random_genome
+from repro.core.hw_model import HBM_BW, PEAK_FLOPS_BF16, roofline
+from repro.core.search_space import DEFAULT_SPACE
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+RTOL = 1e-6          # same-constants reproduction: tight
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def _load_cells():
+    cells = []
+    if not os.path.isdir(RESULTS):
+        return cells
+    for name in sorted(os.listdir(RESULTS)):
+        if not (name.endswith(".jsonl")
+                and name.startswith(("dryrun_", "final_"))):
+            continue
+        with open(os.path.join(RESULTS, name)) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("ok") and not r.get("note", "").startswith(
+                        "SKIPPED") and r.get("flops_dev", 0) > 0:
+                    cells.append(r)
+    return cells
+
+
+def test_genome_scoring_consistent_with_shared_roofline():
+    """The backend's latency columns must be exactly what roofline_terms
+    yields for the genome's own FLOP/byte totals (scoring never forks the
+    constants)."""
+    rng = np.random.default_rng(0)
+    genomes = [random_genome(rng, DEFAULT_SPACE) for _ in range(64)]
+    enc = PopulationEncoding.from_genomes(genomes)
+    be = TPURooflineBackend()
+    objs = be.evaluate_batch(enc, space=DEFAULT_SPACE)
+    lat_min, lat_max = objs[:, 4], objs[:, 5]
+    from repro.core.hw_model import population_layer_costs
+    costs = population_layer_costs(enc, DEFAULT_SPACE)
+    macs = np.where(costs.valid, costs.total_macs, 0).sum(axis=1) \
+        .astype(np.float64)
+    params = np.where(costs.valid, costs.params, 0).sum(axis=1)
+    act = np.where(costs.valid, costs.out_len * costs.out_channels, 0) \
+        .sum(axis=1).astype(np.float64)
+    w_bits = np.asarray(DEFAULT_SPACE.weight_bits, np.float64)[enc.w_bits]
+    a_bits = np.asarray(DEFAULT_SPACE.act_bits, np.float64)[enc.a_bits]
+    bytes_hbm = params * w_bits / 8.0 + act * a_bits / 8.0
+    for i in range(len(enc)):
+        terms = TPU_ROOFLINE.roofline_terms(2.0 * macs[i],
+                                            float(bytes_hbm[i]), 0.0, 1)
+        assert np.isclose(lat_max[i],
+                          max(terms.compute_s, terms.memory_s), rtol=RTOL)
+        # fully folded datapath is never faster than the roofline bound
+        assert lat_min[i] >= lat_max[i] - 1e-12
+    # the shared singleton and the raw function agree (one source of truth)
+    t = TPU_ROOFLINE.roofline_terms(1e15, 1e12, 1e10, 4)
+    r = roofline(1e15, 1e12, 1e10, 4)
+    assert (t.compute_s, t.memory_s, t.collective_s) \
+        == (r.compute_s, r.memory_s, r.collective_s)
+    assert np.isclose(t.compute_s, 1e15 / (4 * PEAK_FLOPS_BF16), rtol=RTOL)
+    assert np.isclose(t.memory_s, 1e12 / (4 * HBM_BW), rtol=RTOL)
+
+
+def test_measured_cells_reproduce_under_current_constants():
+    """Tolerance gate: every recorded dry-run cell's roofline terms must be
+    reproducible from its raw per-device quantities with today's shared
+    constants.  Skips when no dry-run sweep has produced cells."""
+    cells = _load_cells()
+    if not cells:
+        pytest.skip("no measured dry-run cells under results/ "
+                    "(run python -m repro.launch.dryrun --out ...)")
+    for r in cells:
+        chips = CHIPS.get(r["mesh"])
+        assert chips is not None, f"unknown mesh {r['mesh']!r}"
+        terms = TPU_ROOFLINE.roofline_terms(
+            r["flops_dev"] * chips, r["bytes_dev"] * chips,
+            r["coll_dev"] * chips, chips)
+        cell_id = f"{r['arch']}x{r['shape']}x{r['mesh']}"
+        assert np.isclose(terms.compute_s, r["compute_s"],
+                          rtol=RTOL, atol=1e-12), cell_id
+        assert np.isclose(terms.memory_s, r["memory_s"],
+                          rtol=RTOL, atol=1e-12), cell_id
+        assert np.isclose(terms.collective_s, r["collective_s"],
+                          rtol=RTOL, atol=1e-12), cell_id
+        assert terms.dominant == r["dominant"], cell_id
