@@ -1,0 +1,68 @@
+"""CI perf gate over machine-readable bench results (BENCH_*.json).
+
+Reframe-style relative thresholds (SNIPPETS §1): the gate checks *ratios*
+the bench computed against its own same-machine baseline (overlap speedup
+vs. the synchronous loop), never absolute wall times — absolute numbers
+vary wildly across CI runners, ratios don't.
+
+Currently gates BENCH_pipeline.json (benchmarks/pipeline_bench.py):
+
+* ``parity_ok`` must be true — the overlapped pipeline reproduced the
+  synchronous trajectory bit for bit (a hard correctness gate);
+* ``speedup_async >= --min-speedup`` (default 1.2 — the bench itself
+  demonstrates ~1.6-1.9x on an idle box; the CI floor leaves headroom for
+  noisy shared runners while still catching a real overlap regression).
+
+Exit code 1 on any violation, so the build fails.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check_pipeline(path: str, min_speedup: float) -> list:
+    with open(path) as f:
+        payload = json.load(f)
+    summary = payload.get("summary")
+    if not summary:
+        return [f"{path}: no gate summary (was the bench run with --real?)"]
+    failures = []
+    if not summary.get("parity_ok", False):
+        failures.append(
+            f"{path}: parity_ok={summary.get('parity_ok')} — the "
+            f"overlapped pipeline diverged from the synchronous trajectory")
+    speedup = summary.get("speedup_async", 0.0)
+    if speedup < min_speedup:
+        failures.append(
+            f"{path}: speedup_async={speedup:.2f}x < floor "
+            f"{min_speedup:.2f}x — overlap regression")
+    print(f"[gate] {path}: parity_ok={summary.get('parity_ok')} "
+          f"speedup_async={speedup:.2f}x "
+          f"(floor {min_speedup:.2f}x) "
+          f"host_overlap={summary.get('speedup_host_overlap', 0.0):.2f}x "
+          f"devices={summary.get('n_devices')} "
+          f"buckets~{summary.get('buckets_median')}")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("pipeline_json", nargs="?",
+                    default="BENCH_pipeline.json",
+                    help="pipeline bench result (default: "
+                         "BENCH_pipeline.json)")
+    ap.add_argument("--min-speedup", type=float, default=1.2,
+                    help="async overlap speedup floor (default 1.2)")
+    args = ap.parse_args()
+    failures = check_pipeline(args.pipeline_json, args.min_speedup)
+    for f in failures:
+        print(f"[gate] FAIL: {f}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+    print("[gate] all thresholds met")
+
+
+if __name__ == "__main__":
+    main()

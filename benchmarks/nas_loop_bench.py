@@ -195,7 +195,19 @@ def run(log=print, smoke: bool = True) -> List[Dict]:
     log(f"[nas_loop] n={n}: vectorized {t_vectorized * 1e3:.1f}ms/step, "
         f"scalar {t_scalar * 1e3:.1f}ms/step, speedup {speedup:.1f}x "
         f"(children/step ~{int(np.median(children_seen))})")
+    # per-phase wall-time split of the last step (recorded by the search
+    # itself, DESIGN.md §11) — the observability surface the overlap
+    # pipeline is tuned against
+    split = state.history[-1]["timings"]
+    split_row = {
+        "name": f"nas_step_timings_{n}",
+        "us_per_call": sum(split.values()) * 1e6,
+        "derived": " ".join(f"{k}={v * 1e3:.2f}ms"
+                            for k, v in split.items()),
+    }
+    log(f"[nas_loop] step split: {split_row['derived']}")
     return [
+        split_row,
         {"name": f"nas_step_vectorized_{n}",
          "us_per_call": t_vectorized * 1e6,
          "derived": f"speedup={speedup:.1f}x "

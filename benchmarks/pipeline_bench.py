@@ -1,0 +1,250 @@
+"""Overlapped search pipeline: wall-time per generation, off vs pipelined.
+
+Measures what DESIGN.md §11 buys: with device time and host time per
+generation balanced, the synchronous loop pays ``host + device`` per
+generation while the async pipeline pays ``max(host, device)`` — the
+steady-state speedup approaches 2x.  The bench
+
+1. **calibrates**: runs the synchronous loop with a zero-cost trainer to
+   measure the pure host-side generation time, then sizes the simulated
+   per-bucket device time to match it;
+2. runs the same fixed-seed search under ``pipeline="off"``,
+   ``"host_overlap"`` and ``"async"`` and reports wall-time per generation
+   and the speedups;
+3. **parity-gates**: ``off`` and ``host_overlap`` (and the zero-cost
+   calibration run) must produce bit-identical final populations — the
+   overlap is scheduling, never semantics.  A parity failure exits
+   non-zero; the *speedup* floor is enforced separately by
+   ``benchmarks/check_thresholds.py`` (relative gate, reframe-style).
+
+Device time is **simulated by default**: each signature-bucket job sleeps a
+calibrated interval, releasing the GIL exactly as a real XLA dispatch to an
+accelerator would, and returns deterministic genome-derived results.  This
+keeps the measured overlap honest on a single-core CI box, where real
+concurrent *compute* cannot speed anything up.  ``--real`` swaps in the
+real bucketed vmap trainer for multi-core hosts (reported, not gated).
+
+The module forces ``--xla_force_host_platform_device_count=4`` before jax
+initializes so the device-affine scheduler has 4 devices to shard buckets
+across; run it as a subprocess (``python -m benchmarks.pipeline_bench``),
+which is exactly how benchmarks/run.py wires it in.
+"""
+from __future__ import annotations
+
+import os
+
+_FORCE = "--xla_force_host_platform_device_count"
+if _FORCE not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" {_FORCE}=4").strip()
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+from typing import Dict, List, Optional, Tuple  # noqa: E402
+
+import numpy as np       # noqa: E402
+
+from repro.core.evolution import EvolutionarySearch, NASConfig  # noqa: E402
+from repro.core.trainer import TrainResult  # noqa: E402
+
+GENERATIONS = 8
+MODES = ("off", "host_overlap", "async")
+
+
+def _deterministic_result(g) -> TrainResult:
+    det = min(0.99, 0.70 + 0.05 * g.depth())
+    return TrainResult(detection_rate=det,
+                       false_alarm_rate=max(0.0, 0.30 - 0.04 * g.depth()),
+                       val_loss=0.2, steps=0)
+
+
+def _sim_trainer(sleep_s: float, seen_devices: set):
+    """Deterministic stub trainer; ``sleep_s`` stands in for the bucket's
+    XLA dispatch (a sleep releases the GIL exactly like device compute)."""
+    def train(genomes, device=None):
+        seen_devices.add(str(device))
+        if sleep_s > 0.0:
+            time.sleep(sleep_s)
+        return [_deterministic_result(g) for g in genomes]
+    return train
+
+
+def _make_search(pipeline: str, sleep_s: float, seen_devices: set,
+                 smoke: bool) -> EvolutionarySearch:
+    cap = 1024 if smoke else 4096
+    cfg = NASConfig(generations=GENERATIONS,
+                    children_per_gen=cap // 2, n_accept=48,
+                    init_population=32, population_cap=cap,
+                    n_workers=8, seed=11, pipeline=pipeline,
+                    device_affinity=True)
+    return EvolutionarySearch(cfg, None, None,
+                              batch_train_fn=_sim_trainer(sleep_s,
+                                                          seen_devices),
+                              log=lambda *_: None)
+
+
+def _run_mode(pipeline: str, sleep_s: float, smoke: bool
+              ) -> Tuple[object, float, set]:
+    """Run one mode; returns (final state, loop wall time excluding the
+    initial population's training, devices the buckets landed on).  The
+    init cost is measured on a twin search (same seed => identical work)
+    so every mode's number covers exactly its ``GENERATIONS`` steps."""
+    seen: set = set()
+    search = _make_search(pipeline, sleep_s, seen, smoke)
+    t0 = time.perf_counter()
+    state = search.run()
+    total = time.perf_counter() - t0
+    twin = _make_search(pipeline, sleep_s, set(), smoke)
+    t0 = time.perf_counter()
+    twin.init_state()
+    init = time.perf_counter() - t0
+    return state, max(1e-9, total - init), seen
+
+
+def _assert_parity(a, b, label: str) -> None:
+    ok = (list(a.pop.phash) == list(b.pop.phash)
+          and np.array_equal(a.pop.cheap, b.pop.cheap)
+          and np.array_equal(a.pop.expensive, b.pop.expensive))
+    if not ok:
+        raise SystemExit(f"PARITY FAILURE: {label} diverged from the "
+                         f"synchronous trajectory — the overlapped "
+                         f"pipeline changed semantics")
+
+
+def run(log=print, smoke: bool = True) -> Tuple[List[Dict], Dict]:
+    # ---- calibration: pure host-side generation time (zero device cost)
+    cal_state, cal_wall, _ = _run_mode("off", 0.0, smoke)
+    host_gen = cal_wall / GENERATIONS
+    jobs = [r["train_jobs"] for r in cal_state.history if r["train_jobs"]]
+    buckets_median = int(np.median(jobs)) if jobs else 0
+    n_workers = max(8, len(jax_devices()))
+    rounds = max(1, int(np.ceil(buckets_median / n_workers)))
+    sleep_s = host_gen / rounds  # device time per generation ~= host time
+    # short sleeps overshoot their nominal interval (timer granularity +
+    # wakeup latency); measure the ratio and shrink the request so the
+    # *actual* device time matches the host time
+    t0 = time.perf_counter()
+    for _ in range(5):
+        time.sleep(sleep_s)
+    overshoot = (time.perf_counter() - t0) / (5 * sleep_s)
+    sleep_s /= max(1.0, overshoot)
+    log(f"[pipeline] calibrated: host {host_gen * 1e3:.1f}ms/gen, "
+        f"~{buckets_median} buckets/gen over {n_workers} workers, "
+        f"sleep overshoot {overshoot:.2f}x "
+        f"-> {sleep_s * 1e3:.1f}ms/bucket simulated device time")
+
+    # ---- the three modes on the same seed + simulated device time.
+    # Interleaved repeats, per-mode minimum wall: the box throttles under
+    # sustained load and scheduler noise is additive, so the min is the
+    # least-contaminated estimate of each mode's true cost (the trajectory
+    # itself is deterministic — every repeat does identical work).
+    states, walls, devices_seen = {}, {}, {}
+    for _ in range(3):
+        for mode in MODES:
+            state, wall, seen = _run_mode(mode, sleep_s, smoke)
+            states[mode] = state
+            walls[mode] = min(walls.get(mode, np.inf), wall)
+            devices_seen[mode] = seen
+    for mode in MODES:
+        log(f"[pipeline] {mode:13s}: "
+            f"{walls[mode] / GENERATIONS * 1e3:7.1f}ms/gen "
+            f"({len(devices_seen[mode])} devices)")
+
+    # ---- gates: determinism first, speedup reported for the CI threshold
+    _assert_parity(states["off"], cal_state, "zero-cost calibration run")
+    _assert_parity(states["off"], states["host_overlap"], "host_overlap")
+    speedup_async = walls["off"] / walls["async"]
+    speedup_ho = walls["off"] / walls["host_overlap"]
+    n_devices = len(jax_devices())
+    log(f"[pipeline] speedup: async {speedup_async:.2f}x, "
+        f"host_overlap {speedup_ho:.2f}x (parity OK, "
+        f"{n_devices} devices, ~{buckets_median} buckets/gen)")
+
+    rows = [{
+        "name": f"pipeline_{mode}",
+        "us_per_call": walls[mode] / GENERATIONS * 1e6,
+        "derived": (f"speedup={walls['off'] / walls[mode]:.2f}x "
+                    f"devices={len(devices_seen[mode])} "
+                    f"buckets~{buckets_median}"),
+    } for mode in MODES]
+    summary = {
+        "speedup_async": round(speedup_async, 3),
+        "speedup_host_overlap": round(speedup_ho, 3),
+        "parity_ok": True,     # _assert_parity raised otherwise
+        "host_ms_per_gen": round(host_gen * 1e3, 2),
+        "sim_device_ms_per_bucket": round(sleep_s * 1e3, 2),
+        "n_devices": n_devices,
+        "buckets_median": buckets_median,
+        "generations": GENERATIONS,
+    }
+    return rows, summary
+
+
+def run_real(log=print) -> List[Dict]:
+    """Real bucketed vmap training instead of simulated device time — only
+    meaningful on a host with spare cores; reported, never gated."""
+    from repro.core.search_space import SearchSpace
+    space = SearchSpace(input_decimations=(240,))
+    rng = np.random.default_rng(7)
+    tr = (rng.normal(size=(64, 250, 2)).astype(np.float32),
+          (np.arange(64) % 2).astype(np.int32))
+    va = (rng.normal(size=(48, 250, 2)).astype(np.float32),
+          (np.arange(48) % 2).astype(np.int32))
+    rows = []
+    for mode in ("off", "async"):
+        cfg = NASConfig(generations=3, children_per_gen=16, n_accept=8,
+                        init_population=8, population_cap=32, n_workers=4,
+                        seed=11, pipeline=mode, device_affinity=True,
+                        train_steps=8, train_batch=16)
+        s = EvolutionarySearch(cfg, tr, va, space=space,
+                               log=lambda *_: None)
+        t0 = time.perf_counter()
+        s.run()
+        wall = time.perf_counter() - t0
+        log(f"[pipeline --real] {mode}: {wall / 3 * 1e3:.0f}ms/gen")
+        rows.append({"name": f"pipeline_real_{mode}",
+                     "us_per_call": wall / 3 * 1e6,
+                     "derived": "real bucketed training"})
+    return rows
+
+
+def jax_devices():
+    import jax
+    return jax.local_devices()
+
+
+def write_json(rows: List[Dict], summary: Optional[Dict],
+               path: str) -> None:
+    payload = {"bench": "pipeline", "rows": rows}
+    if summary is not None:
+        payload["summary"] = summary
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="population_cap=4096 (default: smoke, 1024)")
+    ap.add_argument("--real", action="store_true",
+                    help="real bucketed training instead of simulated "
+                         "device time (multi-core hosts; not gated)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows + gate summary as JSON")
+    args = ap.parse_args()
+    log = lambda *a: print(*a, file=sys.stderr)  # noqa: E731
+    if args.real:
+        rows, summary = run_real(log=log), None
+    else:
+        rows, summary = run(log=log, smoke=not args.full)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    if args.json:
+        write_json(rows, summary, args.json)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

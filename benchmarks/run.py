@@ -5,8 +5,35 @@ Prints ``name,us_per_call,derived`` CSV (harness contract).  Full-size runs:
 a few minutes.
 """
 import argparse
+import subprocess
 import sys
 import time
+
+
+def _run_pipeline_bench(args) -> list:
+    """The overlapped-pipeline bench needs 4 forced host devices, and
+    ``--xla_force_host_platform_device_count`` only takes effect before jax
+    initializes — by this point the in-process benches already did.  So it
+    runs as a subprocess (the module stages its own XLA_FLAGS) and its CSV
+    rows are folded back into ours."""
+    cmd = [sys.executable, "-m", "benchmarks.pipeline_bench"]
+    if args.full:
+        cmd.append("--full")
+    if args.json:
+        cmd += ["--json", "BENCH_pipeline.json"]
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    print(proc.stderr, file=sys.stderr, end="")
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"pipeline_bench failed (rc={proc.returncode}):\n{proc.stdout}")
+    rows = []
+    for line in proc.stdout.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        name, us, derived = line.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": derived.strip().strip('"')})
+    return rows
 
 
 def main() -> None:
@@ -53,6 +80,7 @@ def main() -> None:
     if args.json:
         train_bench.write_json(train_loop_rows, "BENCH_train_loop.json")
         print("# wrote BENCH_train_loop.json", file=sys.stderr)
+    rows += _run_pipeline_bench(args)
     rows += roofline_table.run(log=lambda *a: print(*a, file=sys.stderr))
     roofline_table.write_markdown(log=lambda *a: print(*a, file=sys.stderr))
 

@@ -21,12 +21,46 @@ are produced by the vectorized genetic operators
 :class:`~repro.core.objectives.Candidate` objects are materialized only for
 the ``n_accept`` children handed to the trainer (and at the
 checkpoint/report edges).
+
+Orchestration (DESIGN.md §11): training dispatches through a device-affine
+:class:`~repro.core.scheduler.DynamicScheduler` — one worker group per
+visible accelerator, so different signature buckets of a generation train
+concurrently on different devices — and ``NASConfig.pipeline`` selects how
+much of the loop overlaps with the devices:
+
+* ``"off"`` — the fully synchronous loop (dispatch, block, select).
+* ``"host_overlap"`` — training is submitted asynchronously and the host
+  folds the merged population's *cheap* domination columns
+  (:class:`~repro.core.pareto.PartialDomination`) while the devices train,
+  finishing with the expensive columns when results land.  No extra RNG
+  draws and a bit-identical domination matrix: the trajectory equals the
+  synchronous loop's exactly.
+* ``"async"`` — steady-state pipelining: generation N+1's children are
+  mutated/cheap-scored/dispatched while generation N still trains (bounded
+  by ``NASConfig.lookahead``), and trained results are admitted into the
+  dormant-gene cache as each bucket lands (the scheduler's ``on_result``
+  hook).  Relaxed semantics — selection folds a generation in only when it
+  drains, so parents lag the newest results; the trajectory differs from
+  the synchronous loop and the mode is opt-in.
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
+import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from collections import deque
+from typing import (
+    Any,
+    Callable,
+    Deque,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
 
 import numpy as np
 
@@ -45,6 +79,7 @@ from repro.core.objective_schema import (
     DesignGoal,
     ObjectiveSchema,
     get_goal,
+    pessimistic_expensive,
 )
 from repro.core.objectives import (
     Candidate,
@@ -52,18 +87,21 @@ from repro.core.objectives import (
     expensive_objectives,
 )
 from repro.core.pareto import (
+    PartialDomination,
     domination_matrices,
     domination_matrix,
     environmental_selection,
     pareto_front,
 )
-from repro.core.scheduler import DynamicScheduler, JobResult
+from repro.core.scheduler import DynamicScheduler, JobResult, SchedulerRun
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
 from repro.core.trainer import TrainResult, train_candidate
 from repro.core.trainer_batch import (
     bucket_by_signature,
     train_candidates_batched,
 )
+
+PIPELINE_MODES = ("off", "host_overlap", "async")
 
 
 @dataclasses.dataclass
@@ -89,6 +127,12 @@ class NASConfig:
     det_min: float = 0.90          # paper's hard acceptance limits
     fa_max: float = 0.20
     batch_training: bool = True    # bucketed vmap-stacked training (§9)
+    pipeline: str = "off"          # "off" | "host_overlap" | "async" (§11)
+    device_affinity: Optional[bool] = None  # shard signature buckets across
+    #   jax.local_devices(); None = auto (on for batched training when >1
+    #   device is visible), False = force single-device dispatch
+    lookahead: int = 1             # async mode: generations produced ahead
+    #   of the oldest still-training one (max lookahead+1 in flight)
 
     @property
     def constraints(self) -> Constraints:
@@ -113,6 +157,23 @@ class NASState:
         return self.pop.to_candidates()
 
 
+@dataclasses.dataclass
+class _TrainPlan:
+    """Rows of a population slated for training (cache misses only)."""
+    todo: List[int]
+    genomes: List[Genome]
+
+
+@dataclasses.dataclass
+class _TrainSubmission:
+    """An in-flight training dispatch: the scheduler run plus the job →
+    candidate alignment needed to scatter results back."""
+    run: SchedulerRun
+    n_jobs: int
+    buckets: Optional[List[List[int]]]   # None = one job per candidate
+    n_genomes: int
+
+
 class EvolutionarySearch:
     """Reusable search driver; inject a trainer for tests."""
 
@@ -124,6 +185,9 @@ class EvolutionarySearch:
                      Callable[[List[Genome]], List[TrainResult]]] = None,
                  log: Callable[[str], None] = print):
         self.cfg = config
+        if config.pipeline not in PIPELINE_MODES:
+            raise ValueError(f"unknown pipeline mode {config.pipeline!r} "
+                             f"(modes: {PIPELINE_MODES})")
         self.space = space
         self.rng = np.random.default_rng(config.seed)
         if config.backends is not None:
@@ -138,6 +202,10 @@ class EvolutionarySearch:
         # columns from the backend, + the expensive pair for selection
         self.schema: ObjectiveSchema = backend_schema(self.backend)
         self.full_schema: ObjectiveSchema = self.schema.with_expensive()
+        # the pessimistic placeholder row (failed/unevaluated candidates) is
+        # schema-derived: width and worst-case values follow the expensive
+        # columns instead of a hard-coded 2-vector
+        self._exp_worst: np.ndarray = pessimistic_expensive(self.full_schema)
         self.goal: DesignGoal = get_goal(config.goal)
         self.constraints: Constraints = self.goal.effective_constraints(
             config.constraints)
@@ -146,7 +214,10 @@ class EvolutionarySearch:
         sel_cols = self.goal.selection_indices(self.full_schema)
         self._goal_cols = None if len(sel_cols) == len(self.full_schema) \
             else sel_cols
-        kde_cols = sel_cols[sel_cols < len(self.schema)]  # cheap part only
+        # the cheap part of the selection view — the host-overlap pipeline
+        # folds these domination columns while the devices train
+        self._sel_cheap_cols = sel_cols[sel_cols < len(self.schema)]
+        kde_cols = self._sel_cheap_cols
         self._kde_cols = None if len(kde_cols) == len(self.schema) \
             else kde_cols
         self.log = log
@@ -159,15 +230,50 @@ class EvolutionarySearch:
         if batch_train_fn is not None:
             self._batch_train_fn = batch_train_fn
         elif train_fn is None and config.batch_training:
-            stage_cache: Dict[int, tuple] = {}  # device dataset, per search
-            self._batch_train_fn = lambda gs: train_candidates_batched(
-                gs, data_train, data_val, space=self.space,
-                steps=config.train_steps, batch_size=config.train_batch,
-                lr=config.lr, seed=config.seed, stage_cache=stage_cache)
+            stage_cache: Dict[tuple, tuple] = {}  # device dataset, per search
+            self._batch_train_fn = lambda gs, device=None: \
+                train_candidates_batched(
+                    gs, data_train, data_val, space=self.space,
+                    steps=config.train_steps, batch_size=config.train_batch,
+                    lr=config.lr, seed=config.seed, stage_cache=stage_cache,
+                    device=device)
         else:
             self._batch_train_fn = None
-        self.scheduler = DynamicScheduler(n_workers=config.n_workers,
-                                          max_retries=2, timeout_s=1800.0)
+        self._batch_fn_takes_device = self._fn_takes_device(
+            self._batch_train_fn)
+        # device-affine scheduling (DESIGN.md §11): one worker group per
+        # visible accelerator so signature buckets train concurrently on
+        # different devices.  Auto mode stays off for scalar trainers (they
+        # cannot place their data) and on single-device hosts — both fall
+        # back to the plain thread pool.
+        self.devices: Optional[List[Any]] = None
+        affinity = config.device_affinity
+        if affinity is None:
+            affinity = self._batch_train_fn is not None
+        if affinity:
+            from repro.launch.mesh import local_search_devices
+            devs = local_search_devices()
+            if len(devs) > 1:
+                self.devices = devs
+        n_workers = config.n_workers if self.devices is None \
+            else max(config.n_workers, len(self.devices))
+        self.scheduler = DynamicScheduler(n_workers=n_workers,
+                                          max_retries=2, timeout_s=1800.0,
+                                          devices=self.devices)
+        # guards evaluated_hashes: the async pipeline's on_result hook
+        # admits results from scheduler worker threads
+        self._cache_lock = threading.Lock()
+
+    @staticmethod
+    def _fn_takes_device(fn) -> bool:
+        if fn is None:
+            return False
+        try:
+            params = inspect.signature(fn).parameters.values()
+        except (TypeError, ValueError):
+            return False
+        return any(p.name == "device" or p.kind == p.VAR_KEYWORD
+                   for p in params)
 
     # ------------------------------------------------------------- lifecycle
     def _sample_unique(self, n: int
@@ -196,7 +302,7 @@ class EvolutionarySearch:
         return PopulationArrays(
             enc=enc,
             cheap=self.backend.evaluate_batch(enc, space=self.space),
-            expensive=np.full((len(enc), 2), np.nan),
+            expensive=np.full((len(enc), len(self._exp_worst)), np.nan),
             phash=np.asarray(hashes, dtype=object),
             born=np.full(len(enc), generation, dtype=np.int64),
             schema=self.schema)
@@ -209,8 +315,13 @@ class EvolutionarySearch:
         return state
 
     # ---------------------------------------------------------------- steps
-    def _make_children(self, state: NASState
-                       ) -> Optional[PopulationArrays]:
+    def _spawn_children(self, state: NASState,
+                        extra_seen: Optional[set] = None
+                        ) -> Optional[Tuple[PopulationEncoding, List[str]]]:
+        """Mutation/crossover + dormant-gene dedup; returns the child gene
+        arrays and phenotype hashes (``None`` if every child was a known
+        phenotype).  ``extra_seen`` adds hashes to dedup against — the
+        async pipeline's still-training generations."""
         pop = state.pop
         parents_idx = sel.sample_parents(self.rng, pop.cheap,
                                          self.cfg.children_per_gen,
@@ -239,6 +350,8 @@ class EvolutionarySearch:
         # population member or an earlier sibling
         hashes = children.batch_phenotype_hash(self.space)
         seen = set(pop.phash)
+        if extra_seen:
+            seen |= extra_seen
         keep: List[int] = []
         kept_hashes: List[str] = []
         for i, h in enumerate(hashes):
@@ -249,32 +362,97 @@ class EvolutionarySearch:
             kept_hashes.append(h)
         if not keep:
             return None
-        return self._score(children.take(keep), kept_hashes,
+        return children.take(keep), kept_hashes
+
+    def _make_children(self, state: NASState
+                       ) -> Optional[PopulationArrays]:
+        spawned = self._spawn_children(state)
+        if spawned is None:
+            return None
+        return self._score(spawned[0], spawned[1],
                            generation=state.generation + 1)
 
-    def _run_scheduled(self, jobs) -> List[JobResult]:
-        """scheduler.run with per-job alignment: the scheduler may return
-        partial results (every worker died), so match by job_id and mark
-        the gaps failed instead of mispairing zip order."""
-        by_id = {r.job_id: r for r in self.scheduler.run(jobs)}
-        return [by_id.get(i, JobResult(job_id=i, ok=False,
-                                       error="no result (workers died)"))
-                for i in range(len(jobs))]
+    # ------------------------------------------------- training dispatch
+    def _call_batch_train(self, genomes: List[Genome], device):
+        """Invoke the batch trainer, forwarding the worker's device when
+        the trainer can place data on it (injected test doubles often
+        can't — they simply ignore affinity)."""
+        if device is not None and self._batch_fn_takes_device:
+            return self._batch_train_fn(genomes, device=device)
+        return self._batch_train_fn(genomes)
 
-    def _run_training_jobs(self, genomes: List[Genome]) -> List[JobResult]:
-        """Dispatch training through the scheduler, one job per signature
-        bucket when batched training is on (retry/speculation then operate
-        on buckets — a failed bucket re-dispatches whole), else one job per
-        candidate.  Returns per-candidate results in input order."""
+    def _plan_training(self, state: NASState, pop: PopulationArrays,
+                       idx: np.ndarray) -> Optional[_TrainPlan]:
+        """Resolve dormant-gene cache hits for rows ``idx`` of ``pop``
+        (writing their expensive objectives immediately); the returned plan
+        lists the rows that genuinely need training (``None`` if none)."""
+        todo: List[int] = []
+        with self._cache_lock:
+            for i in idx:
+                cached = state.evaluated_hashes.get(str(pop.phash[i]))
+                if cached is not None:  # cache hit (dormant genes)
+                    pop.expensive[i] = cached
+                else:
+                    todo.append(int(i))
+        if not todo:
+            return None
+        return _TrainPlan(todo=todo,
+                          genomes=[pop.enc.genome(i) for i in todo])
+
+    def _submit_training(self, genomes: List[Genome],
+                         phashes: Optional[List[str]] = None,
+                         admit: Optional[Callable[[str, np.ndarray], None]]
+                         = None) -> _TrainSubmission:
+        """Dispatch training through the scheduler without blocking: one
+        job per signature bucket when batched training is on (retry/
+        speculation then operate on buckets — a failed bucket re-dispatches
+        whole), else one job per candidate.  ``admit`` (with ``phashes``)
+        is called per successful candidate as each bucket lands — the async
+        pipeline's early-admission hook."""
         if self._batch_train_fn is None:
-            return self._run_scheduled(
-                [(lambda g=g: self._train_fn(g)) for g in genomes])
-        buckets = list(bucket_by_signature(genomes, self.space).values())
-        bucket_results = self._run_scheduled(
-            [(lambda rows=rows: self._batch_train_fn(
-                [genomes[j] for j in rows])) for rows in buckets])
-        out: List[Optional[JobResult]] = [None] * len(genomes)
-        for rows, br in zip(buckets, bucket_results):
+            buckets = None
+            jobs = [(lambda device=None, g=g: self._train_fn(g))
+                    for g in genomes]
+        else:
+            buckets = list(bucket_by_signature(genomes, self.space).values())
+            jobs = [(lambda device=None, rows=rows: self._call_batch_train(
+                [genomes[j] for j in rows], device)) for rows in buckets]
+        on_result = None
+        if admit is not None and phashes is not None:
+            def on_result(r: JobResult) -> None:
+                # runs under the scheduler lock in a worker thread — only
+                # successful, well-formed results are admitted early; the
+                # blocking collect handles failures/pessimism
+                if not r.ok or r.value is None:
+                    return
+                rows = buckets[r.job_id] if buckets is not None \
+                    else [r.job_id]
+                vals = r.value if buckets is not None else [r.value]
+                try:
+                    if len(vals) != len(rows):
+                        return
+                except TypeError:
+                    return
+                for k, j in enumerate(rows):
+                    admit(phashes[j], expensive_objectives(vals[k]))
+        return _TrainSubmission(run=self.scheduler.submit(jobs, on_result),
+                                n_jobs=len(jobs), buckets=buckets,
+                                n_genomes=len(genomes))
+
+    def _collect_training(self, sub: _TrainSubmission
+                          ) -> Tuple[List[JobResult], List[JobResult]]:
+        """Block on a submission; returns (per-candidate results in genome
+        order, raw per-job results).  The scheduler may return partial
+        results (every worker died), so jobs are matched by job_id and the
+        gaps marked failed instead of mispairing zip order."""
+        by_id = {r.job_id: r for r in sub.run.wait()}
+        raw = [by_id.get(i, JobResult(job_id=i, ok=False,
+                                      error="no result (workers died)"))
+               for i in range(sub.n_jobs)]
+        if sub.buckets is None:
+            return raw, raw
+        out: List[Optional[JobResult]] = [None] * sub.n_genomes
+        for rows, br in zip(sub.buckets, raw):
             ok = bool(br.ok and br.value is not None
                       and len(br.value) == len(rows))
             error = br.error if not br.ok else (
@@ -284,67 +462,73 @@ class EvolutionarySearch:
                     job_id=j, ok=ok,
                     value=br.value[k] if ok else None,
                     error=error, attempts=br.attempts,
-                    elapsed_s=br.elapsed_s, worker=br.worker)
-        return out  # type: ignore[return-value]
+                    elapsed_s=br.elapsed_s, worker=br.worker,
+                    device=br.device)
+        return out, raw  # type: ignore[return-value]
 
-    def _train_members(self, state: NASState, pop: PopulationArrays,
-                       idx: np.ndarray) -> None:
-        """Expensive-evaluate rows ``idx`` of ``pop`` (cache-first), writing
-        results into ``pop.expensive`` and the dormant-gene cache.  Genome
-        objects are materialized here only, for the training jobs."""
-        todo: List[int] = []
-        for i in idx:
-            cached = state.evaluated_hashes.get(str(pop.phash[i]))
-            if cached is not None:  # cache hit (dormant genes)
-                pop.expensive[i] = cached
-            else:
-                todo.append(int(i))
-        if not todo:
-            return
-        genomes = [pop.enc.genome(i) for i in todo]
-        results = self._run_training_jobs(genomes)
-        for i, r in zip(todo, results):
+    def _finish_training(self, state: NASState, pop: PopulationArrays,
+                         plan: _TrainPlan, sub: _TrainSubmission
+                         ) -> Dict[str, float]:
+        """Wait on a submission, write expensive objectives (pessimistic on
+        failure) into ``pop`` + the dormant-gene cache, and return the
+        per-device busy time of the dispatched jobs."""
+        results, raw = self._collect_training(sub)
+        for i, r in zip(plan.todo, results):
             if r.ok:
                 exp = expensive_objectives(r.value)
-            else:  # failed after retries: pessimistic objectives, stay in pool
+            else:  # failed after retries: pessimistic objectives, stay in
                 self.log(f"[nas] candidate {pop.phash[i]} failed: "
                          f"{r.error.splitlines()[-1] if r.error else '?'}")
-                exp = np.asarray([1.0, 1.0])
+                exp = self._exp_worst.copy()
             pop.expensive[i] = exp
-            state.evaluated_hashes[str(pop.phash[i])] = exp
+            with self._cache_lock:
+                state.evaluated_hashes[str(pop.phash[i])] = exp
+        busy: Dict[str, float] = {}
+        for r in raw:
+            key = str(r.device) if r.device is not None else "default"
+            busy[key] = busy.get(key, 0.0) + r.elapsed_s
+        return busy
 
-    def step(self, state: NASState) -> NASState:
-        t0 = time.monotonic()
-        children = self._make_children(state)
-        if children is not None:
-            acc_idx = sel.preselect_children(self.rng, state.pop.cheap,
-                                             children.cheap,
-                                             self.cfg.n_accept,
-                                             cols=self._kde_cols)
-            accepted = children.take(acc_idx)
-            self._train_members(state, accepted,
-                                np.arange(len(accepted)))
-            merged = PopulationArrays.concat([state.pop, accepted])
-            n_children, n_trained = len(children), len(accepted)
-        else:
-            merged = state.pop
-            n_children = n_trained = 0
+    def _train_members(self, state: NASState, pop: PopulationArrays,
+                       idx: np.ndarray) -> Dict[str, float]:
+        """Expensive-evaluate rows ``idx`` of ``pop`` (cache-first),
+        blocking until every result is in.  Returns per-device busy time.
+        Genome objects are materialized here only, for the training jobs."""
+        plan = self._plan_training(state, pop, idx)
+        if plan is None:
+            return {}
+        return self._finish_training(state, pop, plan,
+                                     self._submit_training(plan.genomes))
 
-        # goal-conditioned objective view (all columns for the balanced
-        # default — bit-identical to the pre-schema engine); one domination
-        # matrix serves both the environmental selection and the kept
-        # population's front-size report
+    # ------------------------------------------------------ selection fold
+    def _goal_objs(self, merged: PopulationArrays) -> np.ndarray:
+        """The goal-conditioned objective view (all columns for the
+        balanced default — bit-identical to the pre-schema engine)."""
         objs = merged.objective_matrix()
         if self._goal_cols is not None:
             objs = objs[:, self._goal_cols]
-        dom = domination_matrix(objs)
-        keep = environmental_selection(objs, self.cfg.population_cap, dom=dom)
-        new_pop = merged.take(keep)
+        return objs
 
+    def _select_and_record(self, state: NASState, merged: PopulationArrays,
+                           objs: np.ndarray, dom: np.ndarray,
+                           n_children: int, n_trained: int,
+                           timings: Dict[str, float],
+                           device_busy: Dict[str, float],
+                           train_jobs: int,
+                           pipeline: Optional[str] = None,
+                           t0: Optional[float] = None) -> None:
+        """Environmental selection + the per-generation history record.
+        One domination matrix serves both the environmental selection and
+        the kept population's front-size report."""
+        t_sel = time.monotonic()
+        keep = environmental_selection(objs, self.cfg.population_cap,
+                                       dom=dom)
+        new_pop = merged.take(keep)
         state.generation += 1
         front = pareto_front(objs[keep], dom=dom[np.ix_(keep, keep)])
         feasible = new_pop.feasible_mask(self.constraints)
         primary = self.goal.primary_indices(self.schema)
+        timings["select"] = time.monotonic() - t_sel
         rec = {
             "generation": state.generation,
             "children": n_children,
@@ -357,8 +541,16 @@ class EvolutionarySearch:
             "best_primary": float(
                 new_pop.cheap[np.ix_(feasible, primary)].max(axis=1).min())
             if feasible.any() else float("nan"),
-            "elapsed_s": time.monotonic() - t0,
+            "elapsed_s": time.monotonic() - (t0 if t0 is not None else t_sel),
+            # wall-time split of the generation's phases + per-device busy
+            # time of its training jobs (DESIGN.md §11) — how much overlap
+            # the pipeline actually achieved is observable per generation
+            "timings": dict(timings),
+            "device_busy_s": dict(device_busy),
+            "train_jobs": train_jobs,
         }
+        if pipeline is not None:
+            rec["pipeline"] = pipeline
         state.history.append(rec)
         state.pop = new_pop
         self.log(f"[nas] gen {rec['generation']:3d} "
@@ -366,12 +558,173 @@ class EvolutionarySearch:
                  f"feasible={rec['feasible']} "
                  f"best[{self.goal.primary}]={rec['best_primary']:.3e} "
                  f"({rec['elapsed_s']:.1f}s)")
+
+    def step(self, state: NASState) -> NASState:
+        """One generation.  ``pipeline="off"`` dispatches and blocks;
+        ``"host_overlap"`` (and ``"async"``, which degenerates to it for a
+        single step — cross-generation pipelining needs :meth:`run`) folds
+        the merged population's cheap domination columns while the devices
+        train.  Both orderings produce bit-identical trajectories."""
+        t0 = time.monotonic()
+        timings: Dict[str, float] = {}
+        spawned = self._spawn_children(state)
+        timings["children"] = time.monotonic() - t0
+        t = time.monotonic()
+        children = None if spawned is None else self._score(
+            spawned[0], spawned[1], generation=state.generation + 1)
+        timings["cheap_score"] = time.monotonic() - t
+
+        overlap = self.cfg.pipeline in ("host_overlap", "async")
+        device_busy: Dict[str, float] = {}
+        train_jobs = 0
+        t = time.monotonic()
+        if children is not None:
+            acc_idx = sel.preselect_children(self.rng, state.pop.cheap,
+                                             children.cheap,
+                                             self.cfg.n_accept,
+                                             cols=self._kde_cols)
+            accepted = children.take(acc_idx)
+            n_children, n_trained = len(children), len(accepted)
+            if overlap:
+                plan = self._plan_training(state, accepted,
+                                           np.arange(len(accepted)))
+                sub = None if plan is None \
+                    else self._submit_training(plan.genomes)
+                # ---- overlap window: while the devices train, fold the
+                # merged population's cheap domination columns (boolean
+                # folds are order-independent — the finished matrix is
+                # bit-identical to the synchronous one)
+                merged_cheap = np.concatenate([state.pop.cheap,
+                                               accepted.cheap])
+                partial = PartialDomination(
+                    merged_cheap[:, self._sel_cheap_cols])
+                # ---- join: write results, then fold the expensive columns
+                if sub is not None:
+                    device_busy = self._finish_training(state, accepted,
+                                                        plan, sub)
+                    train_jobs = sub.n_jobs
+                timings["train"] = time.monotonic() - t
+                merged = PopulationArrays.concat([state.pop, accepted])
+                objs = self._goal_objs(merged)
+                dom = partial.finish(objs[:, len(self._sel_cheap_cols):])
+            else:
+                plan = self._plan_training(state, accepted,
+                                           np.arange(len(accepted)))
+                if plan is not None:
+                    sub = self._submit_training(plan.genomes)
+                    device_busy = self._finish_training(state, accepted,
+                                                        plan, sub)
+                    train_jobs = sub.n_jobs
+                timings["train"] = time.monotonic() - t
+                merged = PopulationArrays.concat([state.pop, accepted])
+                objs = self._goal_objs(merged)
+                dom = domination_matrix(objs)
+        else:
+            timings["train"] = 0.0
+            merged = state.pop
+            n_children = n_trained = 0
+            objs = self._goal_objs(merged)
+            dom = domination_matrix(objs)
+
+        self._select_and_record(state, merged, objs, dom, n_children,
+                                n_trained, timings, device_busy, train_jobs,
+                                t0=t0)
         return state
 
     def run(self, generations: Optional[int] = None) -> NASState:
+        gens = generations or self.cfg.generations
+        if self.cfg.pipeline == "async":
+            return self._run_async(gens)
         state = self.init_state()
-        for _ in range(generations or self.cfg.generations):
+        for _ in range(gens):
             state = self.step(state)
+        return state
+
+    # --------------------------------------------------- async pipelining
+    def _run_async(self, generations: int) -> NASState:
+        """Steady-state pipelined evolution (``pipeline="async"``).
+
+        Generation N+1's children are mutated, cheap-scored, preselected
+        and *dispatched* while generation N's buckets still train — up to
+        ``lookahead + 1`` generations in flight.  Each bucket's results are
+        admitted into the dormant-gene cache the moment it lands (the
+        scheduler's ``on_result`` hook), so later generations never
+        retrain a phenotype that finished early; environmental selection
+        folds a generation into the population only when it drains, in
+        submission order.  Relaxed semantics: parents of generation N+1
+        are sampled from the population *before* generation N's survivors
+        joined it — the price of never letting the host or the devices
+        idle."""
+        state = self.init_state()
+        target = state.generation + generations
+        produced = state.generation
+
+        def admit(phash: str, exp: np.ndarray) -> None:
+            with self._cache_lock:
+                state.evaluated_hashes[phash] = exp
+
+        empty = state.pop.take(np.asarray([], dtype=np.int64))
+        inflight: Deque[dict] = deque()
+        inflight_hashes: set = set()
+        t_drain = time.monotonic()
+
+        def drain() -> None:
+            nonlocal t_drain
+            entry = inflight.popleft()
+            accepted = entry["accepted"]
+            timings = entry["timings"]
+            device_busy: Dict[str, float] = {}
+            t = time.monotonic()
+            if entry["sub"] is not None:
+                device_busy = self._finish_training(
+                    state, accepted, entry["plan"], entry["sub"])
+            timings["train"] = time.monotonic() - t  # wait-time only: the
+            #   bucket trained while later generations were produced
+            inflight_hashes.difference_update(str(h) for h in accepted.phash)
+            merged = PopulationArrays.concat([state.pop, accepted]) \
+                if len(accepted) else state.pop
+            objs = self._goal_objs(merged)
+            dom = domination_matrix(objs)
+            self._select_and_record(
+                state, merged, objs, dom, entry["n_children"],
+                len(accepted), timings, device_busy,
+                entry["sub"].n_jobs if entry["sub"] is not None else 0,
+                pipeline="async", t0=t_drain)
+            t_drain = time.monotonic()
+
+        while state.generation < target:
+            if produced < target and len(inflight) <= self.cfg.lookahead:
+                t0 = time.monotonic()
+                timings: Dict[str, float] = {}
+                spawned = self._spawn_children(state,
+                                               extra_seen=inflight_hashes)
+                timings["children"] = time.monotonic() - t0
+                t = time.monotonic()
+                accepted, plan, sub, n_children = empty, None, None, 0
+                if spawned is not None:
+                    children = self._score(spawned[0], spawned[1],
+                                           generation=produced + 1)
+                    acc_idx = sel.preselect_children(
+                        self.rng, state.pop.cheap, children.cheap,
+                        self.cfg.n_accept, cols=self._kde_cols)
+                    accepted = children.take(acc_idx)
+                    n_children = len(children)
+                    plan = self._plan_training(state, accepted,
+                                               np.arange(len(accepted)))
+                    if plan is not None:
+                        sub = self._submit_training(
+                            plan.genomes,
+                            phashes=[str(accepted.phash[i])
+                                     for i in plan.todo],
+                            admit=admit)
+                timings["cheap_score"] = time.monotonic() - t
+                inflight_hashes.update(str(h) for h in accepted.phash)
+                inflight.append({"accepted": accepted, "plan": plan,
+                                 "sub": sub, "n_children": n_children,
+                                 "timings": timings})
+                produced += 1
+                continue
+            drain()
         return state
 
     # ------------------------------------------------------- checkpointing
@@ -439,7 +792,7 @@ class EvolutionarySearch:
             a_bits_gene=m["genome"]["a_bits_gene"],
             i_bits_gene=m["genome"]["i_bits_gene"],
             dec_gene=m["genome"]["dec_gene"]) for m in members]
-        expensive = np.full((len(members), 2), np.nan)
+        expensive = np.full((len(members), len(self._exp_worst)), np.nan)
         for i, m in enumerate(members):
             if m["expensive"] is not None:
                 expensive[i] = m["expensive"]
@@ -460,7 +813,20 @@ class EvolutionarySearch:
 
     def run_resumable(self, ckpt_path: str,
                       generations: Optional[int] = None) -> NASState:
-        """Resume from `ckpt_path` if present; checkpoint every generation."""
+        """Resume from `ckpt_path` if present; checkpoint every generation.
+
+        The ``off`` and ``host_overlap`` pipelines checkpoint after every
+        generation (their trajectories are identical, so a search may even
+        resume under the other mode).  The ``async`` pipeline keeps
+        several generations in flight — there is no consistent
+        per-generation cut to persist — so it is rejected here; run it via
+        :meth:`run`."""
+        if self.cfg.pipeline == "async":
+            raise ValueError(
+                "pipeline='async' does not support per-generation "
+                "checkpoint/resume (several generations are in flight); "
+                "use run(), or pipeline='host_overlap' for the overlapped "
+                "deterministic loop")
         import os as _os
         if _os.path.exists(ckpt_path):
             state = self.load_state(ckpt_path)

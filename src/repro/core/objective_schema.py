@@ -45,6 +45,25 @@ CHEAP_NAMES: Tuple[str, ...] = (
 EXPENSIVE_NAMES: Tuple[str, ...] = ("miss_rate", "false_alarm_rate")
 ALL_NAMES: Tuple[str, ...] = CHEAP_NAMES + EXPENSIVE_NAMES
 
+# Worst case per expensive column (all rates in [0, 1], minimized).  The
+# pessimistic placeholder row for untrained/failed members is derived from
+# the schema through :func:`pessimistic_expensive` — never hard-coded as a
+# 2-vector — so a schema with a different expensive column set cannot
+# silently corrupt the expensive matrix.
+EXPENSIVE_WORST: Dict[str, float] = {
+    "miss_rate": 1.0,
+    "false_alarm_rate": 1.0,
+}
+
+
+def pessimistic_expensive(schema: "ObjectiveSchema") -> np.ndarray:
+    """The worst-case expensive row for ``schema`` — one value per
+    expensive column, in schema order.  Unknown columns default to 1.0
+    (every expensive objective is a minimized rate)."""
+    cols = [schema.columns[int(i)] for i in schema.expensive_indices()]
+    return np.asarray([EXPENSIVE_WORST.get(c.name, 1.0) for c in cols],
+                      dtype=np.float64)
+
 
 # ---------------------------------------------------------------------------
 # Constraints — the one copy of the paper's hard acceptance limits

@@ -33,6 +33,7 @@ from repro.core.objective_schema import (  # noqa: F401  (re-exports)
     EXPENSIVE_NAMES,
     LEGACY_CHEAP_SCHEMA,
     ObjectiveSchema,
+    pessimistic_expensive,
 )
 from repro.core.search_space import DEFAULT_SPACE, SearchSpace
 from repro.core.trainer import TrainResult
@@ -178,10 +179,13 @@ class PopulationArrays:
         return np.isfinite(self.expensive).all(axis=1)
 
     def objective_matrix(self) -> np.ndarray:
-        """(N, C+2) full objective matrix (``full_schema`` column order),
-        pessimistic where untrained."""
+        """(N, C+E) full objective matrix (``full_schema`` column order),
+        pessimistic where untrained.  The placeholder row is derived from
+        the schema's expensive columns (width and worst-case values), so a
+        schema with a non-default expensive set stays consistent."""
+        worst = pessimistic_expensive(self.full_schema)
         exp = np.where(np.isfinite(self.expensive), self.expensive,
-                       PESSIMISTIC_EXPENSIVE[None, :])
+                       worst[None, :])
         return np.concatenate([self.cheap, exp], axis=1)
 
     def feasible_mask(self,

@@ -114,6 +114,58 @@ def domination_matrices(points: np.ndarray,
     return doms
 
 
+class PartialDomination:
+    """A domination matrix split into an early and a late column fold.
+
+    The search pipeline's host-overlap window (DESIGN.md §11) builds the
+    cheap-column ``all(<=)`` / ``any(<)`` accumulators for the merged
+    population *while the generation's buckets train on the devices*; when
+    the expensive objectives land, :meth:`finish` folds just those columns
+    in.  Boolean ``&=`` / ``|=`` folds are order-independent, so the result
+    is bit-identical to ``domination_matrix(np.concatenate([early, late],
+    axis=1))`` — the overlapped pipeline's selection is exactly the
+    synchronous loop's.
+    """
+
+    def __init__(self, early: np.ndarray, row_chunk: int = 256):
+        early = np.asarray(early, dtype=np.float64)
+        self._n = early.shape[0]
+        self._row_chunk = row_chunk
+        n = self._n
+        self._le = np.empty((n, n), dtype=bool)
+        self._lt = np.empty((n, n), dtype=bool)
+        cols = [np.ascontiguousarray(early[:, k])
+                for k in range(early.shape[1])]
+        for s in range(0, n, row_chunk):
+            e = min(n, s + row_chunk)
+            le = np.ones((e - s, n), dtype=bool)
+            lt = np.zeros((e - s, n), dtype=bool)
+            for c in cols:
+                blk = c[s:e, None]
+                le &= blk <= c[None, :]
+                lt |= blk < c[None, :]
+            self._le[s:e] = le
+            self._lt[s:e] = lt
+
+    def finish(self, late: np.ndarray) -> np.ndarray:
+        """Fold the late columns and return the full domination matrix.
+        Consumes the accumulators in place (call once)."""
+        late = np.asarray(late, dtype=np.float64)
+        if late.shape[0] != self._n:
+            raise ValueError(f"late columns have {late.shape[0]} rows; "
+                             f"early fold had {self._n}")
+        n, row_chunk = self._n, self._row_chunk
+        cols = [np.ascontiguousarray(late[:, k])
+                for k in range(late.shape[1])]
+        for s in range(0, n, row_chunk):
+            e = min(n, s + row_chunk)
+            for c in cols:
+                blk = c[s:e, None]
+                self._le[s:e] &= blk <= c[None, :]
+                self._lt[s:e] |= blk < c[None, :]
+        return self._le & self._lt
+
+
 def _peel_fronts(dom: np.ndarray):
     """Yield fronts from a domination matrix (Deb peeling, vectorized).
 

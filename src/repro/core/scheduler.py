@@ -20,15 +20,29 @@ signature buckets (one bucket = one vmap-stacked training, DESIGN.md §9),
 so retry and speculation operate on buckets, exactly as they previously
 operated on single candidates.
 
+Two orchestration axes added for the overlapped search pipeline
+(DESIGN.md §11):
+
+* **Device affinity** — construct with ``devices=[...]`` (one opaque token
+  per accelerator, e.g. ``jax.local_devices()``) and each worker thread is
+  pinned to ``devices[widx % len(devices)]``; jobs are then invoked as
+  ``job(device)`` so the payload can place its data on its worker's
+  accelerator.  A speculative twin is *banned* from the straggling
+  attempt's device (a straggler is as likely a sick device as a sick
+  input), falling back to any worker when no other device has a live
+  worker.  Retries carry no ban — any device may pick them up.
+* **Asynchronous submission** — :meth:`DynamicScheduler.submit` starts the
+  batch in background threads and returns a :class:`SchedulerRun` handle;
+  the caller overlaps host-side work with the running jobs and collects
+  with :meth:`SchedulerRun.wait`.  :meth:`DynamicScheduler.run` is the
+  blocking composition ``submit(...).wait()``.
+
 Everything is event-driven: workers block on a condition variable (no
 dequeue polling), and the straggler watcher sleeps until the earliest
 moment a running job can exceed ``timeout_s`` — or until any state change
 wakes it.  Speculation stays gated on "no unfinished job is waiting for a
-worker", but that backlog test and the per-job queued/inflight/started-at
-state are now read under the same lock the workers write them under — a
-worker dequeuing concurrently can no longer fabricate the transient
-non-empty-queue observations that the old ``qsize() > 0`` early-continue
-used to skip (and thereby postpone) speculation on.
+worker", with the backlog test and the per-job queued/inflight/started-at
+state read under the same lock the workers write them under.
 """
 from __future__ import annotations
 
@@ -37,8 +51,7 @@ import threading
 import time
 import traceback
 from collections import deque
-from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -50,119 +63,227 @@ class JobResult:
     attempts: int = 1
     elapsed_s: float = 0.0
     worker: int = -1
+    device: Any = None   # the winning attempt's device affinity (None =
+    #                      scheduler constructed without device affinity)
+
+
+class SchedulerRun:
+    """One submitted batch of jobs executing in background threads.
+
+    Returned by :meth:`DynamicScheduler.submit`; the submitting thread is
+    free to do host-side work (the search pipeline's overlap window) until
+    it calls :meth:`wait`.  All shared state lives behind one condition
+    variable; worker threads and the straggler watcher exit on their own
+    once every job has a result (or every worker died), so an abandoned
+    handle does not leak threads.
+    """
+
+    def __init__(self, jobs: Sequence[Callable[..., Any]], *,
+                 n_workers: int, max_retries: int, timeout_s: float,
+                 speculate: bool,
+                 devices: Optional[Sequence[Any]],
+                 on_result: Optional[Callable[[JobResult], None]]):
+        self._jobs = list(jobs)
+        self._n = len(self._jobs)
+        self._max_retries = max_retries
+        self._timeout_s = timeout_s
+        self._speculate = speculate
+        self._on_result = on_result
+        self._devices = list(devices) if devices else None
+
+        self._cond = threading.Condition()
+        self._results: Dict[int, JobResult] = {}
+        self._attempts: Dict[int, int] = {i: 0 for i in range(self._n)}
+        self._started_at: Dict[int, float] = {}
+        self._inflight: Dict[int, int] = {}      # job_id -> live attempts
+        self._running_dev: Dict[int, Any] = {}   # job_id -> device of the
+        #                                          single live attempt
+        # dispatchable (job_id, banned_device); ban != None only on
+        # speculative twins
+        self._pending: Deque[Tuple[int, Any]] = deque(
+            (i, None) for i in range(self._n))
+        self._alive = 0
+        self._alive_devices: Dict[int, Any] = {}  # widx -> device
+
+        if self._n == 0:
+            return
+        self._alive = n_workers
+        for w in range(n_workers):
+            dev = self._devices[w % len(self._devices)] \
+                if self._devices else None
+            self._alive_devices[w] = dev
+            threading.Thread(target=self._worker, args=(w, dev),
+                             daemon=True, name=f"sched-worker-{w}").start()
+        if speculate:
+            threading.Thread(target=self._watcher, daemon=True,
+                             name="sched-watcher").start()
+
+    # ----------------------------------------------------------- public API
+    def done(self) -> bool:
+        with self._cond:
+            return len(self._results) >= self._n or self._alive == 0
+
+    def wait(self, timeout: Optional[float] = None) -> List[JobResult]:
+        """Block until every job has a result (or every worker died, in
+        which case the partial results are returned — the caller aligns by
+        ``job_id``).  Results come back sorted by job id."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while len(self._results) < self._n and self._alive > 0:
+                rest = None if deadline is None \
+                    else max(0.0, deadline - time.monotonic())
+                if rest == 0.0:
+                    break
+                self._cond.wait(timeout=rest)
+            return [self._results[i] for i in sorted(self._results)]
+
+    # -------------------------------------------------------------- workers
+    def _eligible(self, entry: Tuple[int, Any], device: Any) -> bool:
+        """May a worker pinned to ``device`` take this pending entry?  A
+        twin's device ban applies only while some *other* live worker could
+        honor it — affinity must never deadlock the queue."""
+        _, ban = entry
+        if ban is None or device is None or ban != device:
+            return True
+        return not any(d != ban for d in self._alive_devices.values())
+
+    def _take(self, device: Any) -> Optional[int]:
+        """Pop the first eligible pending job id (stale twins of finished
+        jobs are dropped on the way).  Caller holds the lock."""
+        for _ in range(len(self._pending)):
+            entry = self._pending.popleft()
+            jid = entry[0]
+            if jid in self._results and self._results[jid].ok:
+                continue  # stale twin of a finished job
+            if self._eligible(entry, device):
+                return jid
+            self._pending.append(entry)  # rotate: not for this worker
+        return None
+
+    def _worker(self, widx: int, device: Any) -> None:
+        try:
+            self._worker_loop(widx, device)
+        finally:
+            with self._cond:
+                self._alive -= 1
+                self._alive_devices.pop(widx, None)
+                self._cond.notify_all()
+
+    def _worker_loop(self, widx: int, device: Any) -> None:
+        while True:
+            with self._cond:
+                while True:
+                    if len(self._results) >= self._n:
+                        return
+                    jid = self._take(device)
+                    if jid is not None:
+                        break
+                    self._cond.wait()
+                self._attempts[jid] += 1
+                att = self._attempts[jid]
+                self._inflight[jid] = self._inflight.get(jid, 0) + 1
+                if self._inflight[jid] == 1:
+                    self._running_dev[jid] = device
+                self._started_at[jid] = time.monotonic()
+                self._cond.notify_all()  # job left the queue: watcher re-arms
+            t0 = time.monotonic()
+            try:
+                value = self._jobs[jid](device) if self._devices is not None \
+                    else self._jobs[jid]()
+                res = JobResult(jid, True, value=value, attempts=att,
+                                elapsed_s=time.monotonic() - t0,
+                                worker=widx, device=device)
+            except Exception:  # noqa: BLE001 — worker failure is data
+                res = JobResult(jid, False, error=traceback.format_exc(),
+                                attempts=att,
+                                elapsed_s=time.monotonic() - t0,
+                                worker=widx, device=device)
+            with self._cond:
+                self._inflight[jid] -= 1
+                if jid in self._results and self._results[jid].ok:
+                    self._cond.notify_all()
+                    continue  # lost the speculation race
+                if res.ok:
+                    self._results[jid] = res
+                    if self._on_result:
+                        self._on_result(res)
+                else:
+                    if att <= self._max_retries:
+                        self._pending.append((jid, None))  # re-dispatch
+                    else:
+                        self._results[jid] = res
+                        if self._on_result:
+                            self._on_result(res)
+                self._cond.notify_all()
+
+    # -------------------------------------------------------------- watcher
+    def _watcher(self) -> None:
+        """Straggler watch: once no unfinished job is waiting for a worker,
+        a job past ``timeout_s`` with a single live attempt gets duplicated
+        — first result wins.  The twin is banned from the straggling
+        attempt's device so it lands on a different accelerator when one
+        has a live worker."""
+        with self._cond:
+            while len(self._results) < self._n and self._alive > 0:
+                wait_s: Optional[float] = None
+                backlog = any(jid not in self._results
+                              for jid, _ in self._pending)
+                if not backlog:
+                    now = time.monotonic()
+                    for jid in range(self._n):
+                        if jid in self._results \
+                                or any(p == jid for p, _ in self._pending):
+                            continue
+                        if self._inflight.get(jid, 0) != 1:
+                            continue
+                        run_s = now - self._started_at.get(jid, now)
+                        if run_s > self._timeout_s:
+                            self._attempts[jid] = 0  # fresh twin budget
+                            self._pending.append(
+                                (jid, self._running_dev.get(jid)))
+                            self._cond.notify_all()
+                        else:
+                            rest = self._timeout_s - run_s
+                            wait_s = rest if wait_s is None \
+                                else min(wait_s, rest)
+                self._cond.wait(timeout=wait_s)
+            self._cond.notify_all()
 
 
 class DynamicScheduler:
-    """Run a batch of independent jobs with retries + speculative execution."""
+    """Run batches of independent jobs with retries + speculative execution.
+
+    ``devices`` (optional) turns on device-affine dispatch: one opaque
+    token per accelerator; worker ``w`` is pinned to
+    ``devices[w % len(devices)]`` and jobs are invoked as ``job(device)``
+    instead of ``job()`` so the payload can stage its data there.
+    """
 
     def __init__(self, n_workers: int = 4, max_retries: int = 2,
-                 timeout_s: float = 3600.0, speculate: bool = True):
+                 timeout_s: float = 3600.0, speculate: bool = True,
+                 devices: Optional[Sequence[Any]] = None):
         self.n_workers = max(1, n_workers)
         self.max_retries = max_retries
         self.timeout_s = timeout_s
         self.speculate = speculate
+        self.devices = list(devices) if devices else None
 
-    def run(self, jobs: Sequence[Callable[[], Any]],
+    def submit(self, jobs: Sequence[Callable[..., Any]],
+               on_result: Optional[Callable[[JobResult], None]] = None
+               ) -> SchedulerRun:
+        """Start ``jobs`` in the background; returns the run handle.  The
+        caller may overlap host-side work until :meth:`SchedulerRun.wait`.
+        ``on_result`` fires under the scheduler lock as each job finishes
+        (first ok attempt, or the final failed retry) — keep it short and
+        never let it raise (a raising callback kills its worker)."""
+        return SchedulerRun(
+            jobs, n_workers=self.n_workers, max_retries=self.max_retries,
+            timeout_s=self.timeout_s, speculate=self.speculate,
+            devices=self.devices, on_result=on_result)
+
+    def run(self, jobs: Sequence[Callable[..., Any]],
             on_result: Optional[Callable[[JobResult], None]] = None
             ) -> List[JobResult]:
-        n = len(jobs)
-        if n == 0:
+        if len(jobs) == 0:
             return []
-        results: Dict[int, JobResult] = {}
-        cond = threading.Condition()
-        attempts: Dict[int, int] = {i: 0 for i in range(n)}
-        started_at: Dict[int, float] = {}
-        inflight: Dict[int, int] = {}   # job_id -> live attempt count
-        pending: Deque[int] = deque(range(n))  # dispatchable job ids
-
-        alive = [0]  # live worker count; 0 with results missing => give up
-
-        def worker(widx: int):
-            try:
-                _worker_loop(widx)
-            finally:
-                with cond:
-                    alive[0] -= 1
-                    cond.notify_all()
-
-        def _worker_loop(widx: int):
-            while True:
-                with cond:
-                    while not pending and len(results) < n:
-                        cond.wait()
-                    if len(results) == n:
-                        return
-                    jid = pending.popleft()
-                    if jid in results:  # stale twin of a finished job
-                        continue
-                    attempts[jid] += 1
-                    att = attempts[jid]
-                    inflight[jid] = inflight.get(jid, 0) + 1
-                    started_at[jid] = time.monotonic()
-                    cond.notify_all()  # job left the queue: watcher re-arms
-                t0 = time.monotonic()
-                try:
-                    value = jobs[jid]()
-                    res = JobResult(jid, True, value=value, attempts=att,
-                                    elapsed_s=time.monotonic() - t0,
-                                    worker=widx)
-                except Exception:  # noqa: BLE001 — worker failure is data
-                    res = JobResult(jid, False, error=traceback.format_exc(),
-                                    attempts=att,
-                                    elapsed_s=time.monotonic() - t0,
-                                    worker=widx)
-                with cond:
-                    inflight[jid] -= 1
-                    if jid in results and results[jid].ok:
-                        cond.notify_all()
-                        continue  # lost the speculation race
-                    if res.ok:
-                        results[jid] = res
-                        if on_result:
-                            on_result(res)
-                    else:
-                        if att <= self.max_retries:
-                            pending.append(jid)  # re-dispatch
-                        else:
-                            results[jid] = res
-                            if on_result:
-                                on_result(res)
-                    cond.notify_all()
-
-        with ThreadPoolExecutor(self.n_workers) as pool:
-            alive[0] = self.n_workers
-            for w in range(self.n_workers):
-                pool.submit(worker, w)
-            # straggler watch: once no unfinished job is waiting for a
-            # worker, a job past timeout_s with a single live attempt gets
-            # duplicated — first result wins.  The backlog test and the
-            # per-job state are read under the same lock the workers write
-            # them under, so a concurrent dequeue can no longer produce the
-            # transient queue states that used to postpone speculation.
-            # If every worker died (e.g. an on_result callback raised), stop
-            # waiting and return the partial results, like the old
-            # futures-done loop did — never deadlock on a missing notify.
-            with cond:
-                while len(results) < n and alive[0] > 0:
-                    wait_s: Optional[float] = None
-                    backlog = any(jid not in results for jid in pending)
-                    if self.speculate and not backlog:
-                        now = time.monotonic()
-                        for jid in range(n):
-                            if jid in results or jid in pending:
-                                continue
-                            if inflight.get(jid, 0) != 1:
-                                continue
-                            run_s = now - started_at.get(jid, now)
-                            if run_s > self.timeout_s:
-                                attempts[jid] = 0  # fresh budget for the twin
-                                pending.append(jid)
-                                cond.notify_all()
-                            else:
-                                rest = self.timeout_s - run_s
-                                wait_s = rest if wait_s is None \
-                                    else min(wait_s, rest)
-                    cond.wait(timeout=wait_s)
-                cond.notify_all()  # release workers parked on the queue
-        # deterministic order
-        return [results[i] for i in sorted(results)]
+        return self.submit(jobs, on_result=on_result).wait()

@@ -27,6 +27,16 @@ that guarantee it:
 
 Singleton buckets fall back to the scalar path (vmap over one candidate
 buys nothing and would double-compile).
+
+Device affinity (DESIGN.md §11): pass ``device=`` and the bucket's staged
+dataset, stacked index/key/bit arrays and eval batches are committed to
+that accelerator with ``jax.device_put`` — different signature buckets of
+one generation then train concurrently on different devices.  The staging
+cache is keyed per ``(input_length, device)`` and the compile cache per
+``(signature, steps, batch, lr, device)``, so device-affine dispatch never
+thrashes either.  Numerics are device-independent: the same compiled
+program runs wherever the data lives, so results are bit-identical across
+devices (asserted in tests/test_multi_device.py).
 """
 from __future__ import annotations
 
@@ -157,8 +167,9 @@ def _build_bucket_fns(specs: Sequence[LayerSpec], use_quant: bool,
 
 
 def _bucket_fns(sig: ShapeSignature, specs: Sequence[LayerSpec],
-                steps: int, batch_size: int, lr: float) -> tuple:
-    key = (sig, steps, batch_size, float(lr))
+                steps: int, batch_size: int, lr: float,
+                device=None) -> tuple:
+    key = (sig, steps, batch_size, float(lr), device)
     with _CACHE_LOCK:
         fns = _BUCKET_FN_CACHE.get(key)
         if fns is not None:
@@ -181,27 +192,37 @@ def _bucket_fns(sig: ShapeSignature, specs: Sequence[LayerSpec],
 # Bucket training
 # ---------------------------------------------------------------------------
 
+def _put(x, device=None) -> jnp.ndarray:
+    """Commit ``x`` to ``device`` (default device when None).  device_put
+    with an explicit device yields a *committed* array, so every jit that
+    consumes it compiles for and executes on that accelerator."""
+    return jnp.asarray(x) if device is None else jax.device_put(x, device)
+
+
 def _train_bucket(genomes: List[Genome], seeds: Sequence[int],
                   sig: ShapeSignature, space: SearchSpace,
                   x_tr: jnp.ndarray, y_tr: jnp.ndarray,
                   x_va: np.ndarray, y_va: np.ndarray,
                   steps: int, batch_size: int, lr: float,
-                  eval_batch: int) -> List[TrainResult]:
+                  eval_batch: int, device=None) -> List[TrainResult]:
     specs = genomes[0].phenotype(space)
-    train_bucket, eval_bucket = _bucket_fns(sig, specs, steps, batch_size, lr)
+    train_bucket, eval_bucket = _bucket_fns(sig, specs, steps, batch_size,
+                                            lr, device)
 
     n = int(x_tr.shape[0])
     idx_rows, calib_rows = zip(*(presample_indices(s, n, steps, batch_size)
                                  for s in seeds))
-    idx = jnp.asarray(np.stack(idx_rows))        # (N, steps, B)
-    calib = jnp.asarray(np.stack(calib_rows))    # (N, C)
-    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    idx = _put(np.stack(idx_rows), device)       # (N, steps, B)
+    calib = _put(np.stack(calib_rows), device)   # (N, C)
+    keys = _put(np.stack([np.asarray(jax.random.PRNGKey(s))
+                          for s in seeds]), device)
     if sig[2]:
-        bits = jnp.asarray(np.stack(
+        bits = _put(np.stack(
             [(q.weight_bits, q.act_bits, q.input_bits)
-             for q in (g.quant(space) for g in genomes)]).astype(np.int32))
+             for q in (g.quant(space) for g in genomes)]).astype(np.int32),
+            device)
     else:
-        bits = jnp.zeros((len(genomes), 3), jnp.int32)  # unused by _quant
+        bits = _put(np.zeros((len(genomes), 3), np.int32), device)
 
     params = train_bucket(keys, idx, calib, bits, x_tr, y_tr)
 
@@ -211,8 +232,8 @@ def _train_bucket(genomes: List[Genome], seeds: Sequence[int],
     nll_parts, preds = [], []
     for i in range(0, len(x_va), eval_batch):
         nll, pred = eval_bucket(params, bits,
-                                jnp.asarray(x_va[i:i + eval_batch]),
-                                jnp.asarray(y_va[i:i + eval_batch]))
+                                _put(x_va[i:i + eval_batch], device),
+                                _put(y_va[i:i + eval_batch], device))
         nll_parts.append(nll)
         preds.append(pred)
     pred = np.asarray(jnp.concatenate(preds, axis=1))       # (N, n_va)
@@ -241,7 +262,8 @@ def train_candidates_batched(
     use_quant: bool = True,
     eval_batch: int = 256,
     min_bucket: int = 2,
-    stage_cache: Optional[Dict[int, tuple]] = None,
+    stage_cache: Optional[Dict[tuple, tuple]] = None,
+    device=None,
 ) -> List[TrainResult]:
     """Train a whole child generation, bucketed by shape signature.
 
@@ -249,10 +271,13 @@ def train_candidates_batched(
     ``seeds`` optionally gives per-candidate training seeds (default: the
     single ``seed`` for all, matching the search driver's scalar behavior).
     Buckets smaller than ``min_bucket`` take the scalar
-    :func:`train_candidate` path.  ``stage_cache`` (want_len → staged
-    arrays) lets a long-lived caller keep the prepped dataset resident on
-    device across calls — the search driver passes one per search, so
-    concurrently dispatched buckets don't re-upload the training set.
+    :func:`train_candidate` path.  ``stage_cache`` ((want_len, device) →
+    staged arrays) lets a long-lived caller keep the prepped dataset
+    resident on device across calls — the search driver passes one per
+    search, so concurrently dispatched buckets don't re-upload the
+    training set.  ``device`` pins every bucket of this call to one
+    accelerator (the device-affine scheduler passes its worker's device);
+    ``None`` keeps today's default-device behavior.
     """
     genomes = list(genomes)
     if seeds is None:
@@ -264,11 +289,11 @@ def train_candidates_batched(
     staged = stage_cache if stage_cache is not None else {}
 
     def stage(want_len: int) -> tuple:
-        got = staged.get(want_len)
+        got = staged.get((want_len, device))
         if got is None:  # setdefault: concurrent stagers agree on one copy
-            got = staged.setdefault(want_len, (
-                jnp.asarray(prep_inputs(data_train[0], want_len)),
-                jnp.asarray(data_train[1]),
+            got = staged.setdefault((want_len, device), (
+                _put(prep_inputs(data_train[0], want_len), device),
+                _put(data_train[1], device),
                 prep_inputs(data_val[0], want_len),
                 data_val[1]))
         return got
@@ -276,16 +301,23 @@ def train_candidates_batched(
     for sig, rows in bucket_by_signature(genomes, space, use_quant).items():
         if len(rows) < min_bucket:
             for i in rows:
-                results[i] = train_candidate(
-                    genomes[i], data_train, data_val, space=space,
-                    steps=steps, batch_size=batch_size, lr=lr,
-                    seed=seeds[i], use_quant=use_quant)
+                if device is not None:
+                    with jax.default_device(device):
+                        results[i] = train_candidate(
+                            genomes[i], data_train, data_val, space=space,
+                            steps=steps, batch_size=batch_size, lr=lr,
+                            seed=seeds[i], use_quant=use_quant)
+                else:
+                    results[i] = train_candidate(
+                        genomes[i], data_train, data_val, space=space,
+                        steps=steps, batch_size=batch_size, lr=lr,
+                        seed=seeds[i], use_quant=use_quant)
             continue
         x_tr, y_tr, x_va, y_va = stage(sig[1])
         bucket_results = _train_bucket(
             [genomes[i] for i in rows], [seeds[i] for i in rows], sig,
             space, x_tr, y_tr, x_va, y_va, steps, batch_size, lr,
-            eval_batch)
+            eval_batch, device)
         for i, r in zip(rows, bucket_results):
             results[i] = r
     return results  # type: ignore[return-value]

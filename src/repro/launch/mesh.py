@@ -6,7 +6,7 @@ dry-run must set XLA_FLAGS before jax initializes.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax
 
@@ -17,6 +17,19 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def local_search_devices(max_devices: Optional[int] = None) -> List:
+    """The accelerators the search orchestrator may shard signature buckets
+    across (DESIGN.md §11) — one scheduler worker group per entry.
+
+    A FUNCTION for the same reason as :func:`make_production_mesh`: calling
+    it initializes the jax backend, so it must only run after any
+    ``XLA_FLAGS`` staging (``--xla_force_host_platform_device_count=N``
+    simulates an N-device host for tests/benchmarks).
+    """
+    devs = list(jax.local_devices())
+    return devs[:max_devices] if max_devices else devs
 
 
 # Divisibility-driven deviations from the defaults (DESIGN.md §5):

@@ -1,0 +1,20 @@
+"""Device-affine orchestration on a (simulated) multi-device host.
+
+Runs in a subprocess with 4 forced host devices — the main pytest process
+must keep a single device (see conftest), and
+``--xla_force_host_platform_device_count`` only takes effect before jax
+initializes.  The child asserts the full §11 contract: device resolution,
+bucket spreading, per-device busy accounting, affinity-on pipeline parity,
+and device-invariant bucketed training.  See multi_device_check.py.
+"""
+import os
+import subprocess
+import sys
+
+
+def test_device_affine_orchestration_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "multi_device_check.py")
+    proc = subprocess.run([sys.executable, script], capture_output=True,
+                          text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "MULTI_DEVICE_OK" in proc.stdout

@@ -103,3 +103,143 @@ def test_straggler_speculation():
     assert results[0].ok
     assert results[0].value in ("fast", "slow")
     assert results[0].value == "fast"  # the speculative twin finished first
+
+
+# ---------------------------------------------------------------------------
+# Device affinity + asynchronous submission (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def test_workers_pinned_round_robin_and_jobs_receive_device():
+    """With ``devices`` configured, worker w is pinned to
+    ``devices[w % K]`` and jobs are invoked as ``job(device)``.  A barrier
+    forces all four workers to take exactly one job each, so both devices
+    must appear twice."""
+    barrier = threading.Barrier(4)
+
+    def job(device):
+        barrier.wait(timeout=5.0)
+        return device
+
+    sched = DynamicScheduler(n_workers=4, speculate=False,
+                             devices=["d0", "d1"])
+    results = sched.run([job] * 4)
+    assert all(r.ok for r in results)
+    assert sorted(r.value for r in results) == ["d0", "d0", "d1", "d1"]
+    assert all(r.device == r.value for r in results)
+
+
+def test_no_devices_means_zero_arg_jobs():
+    """Without affinity the call convention is unchanged: ``job()``."""
+    sched = DynamicScheduler(n_workers=2, speculate=False)
+    results = sched.run([lambda: "plain"])
+    assert results[0].ok and results[0].value == "plain"
+    assert results[0].device is None
+
+
+def test_speculative_twin_lands_on_other_device():
+    """A straggler's twin is banned from the straggling attempt's device:
+    with one worker per device, the second attempt must land on the other
+    accelerator."""
+    release = threading.Event()
+    runs = []
+    lock = threading.Lock()
+
+    def hangs_once(device):
+        with lock:
+            runs.append(device)
+            first = len(runs) == 1
+        if first:
+            release.wait(timeout=10.0)
+            return "slow"
+        release.set()
+        return "fast"
+
+    sched = DynamicScheduler(n_workers=2, max_retries=0, timeout_s=0.3,
+                             speculate=True, devices=["a", "b"])
+    results = sched.run([hangs_once])
+    release.set()
+    assert results[0].ok
+    assert len(runs) == 2 and runs[0] != runs[1]
+
+
+def test_twin_ban_cannot_deadlock_on_single_device_group():
+    """When every live worker shares the straggler's device the ban is
+    unsatisfiable and must be waived — the twin still runs."""
+    release = threading.Event()
+    runs = []
+    lock = threading.Lock()
+
+    def hangs_once(device):
+        with lock:
+            runs.append(device)
+            first = len(runs) == 1
+        if first:
+            release.wait(timeout=10.0)
+            return "slow"
+        release.set()
+        return "fast"
+
+    sched = DynamicScheduler(n_workers=2, max_retries=0, timeout_s=0.3,
+                             speculate=True, devices=["only"])
+    results = sched.run([hangs_once])
+    release.set()
+    assert results[0].ok
+    assert runs == ["only", "only"]
+
+
+def test_retry_keeps_affinity_but_no_ban():
+    """A *failed* attempt re-dispatches unbanned — any device may retry it
+    (the ban is a straggler heuristic, not a failure policy)."""
+    attempts = []
+    lock = threading.Lock()
+
+    def flaky(device):
+        with lock:
+            attempts.append(device)
+            n = len(attempts)
+        if n == 1:
+            raise RuntimeError("transient device fault")
+        return device
+
+    sched = DynamicScheduler(n_workers=2, max_retries=2, speculate=False,
+                             devices=["a", "b"])
+    r = sched.run([flaky])[0]
+    assert r.ok and r.attempts == 2
+    assert r.value in ("a", "b") and r.device == r.value
+
+
+def test_submit_overlaps_host_work_then_wait_collects():
+    """submit() returns immediately; the caller owns the gap until wait()."""
+    gate = threading.Event()
+    sched = DynamicScheduler(n_workers=2, speculate=False)
+    run = sched.submit([lambda: (gate.wait(timeout=10.0), 1)[1]
+                        for _ in range(2)])
+    assert not run.done()          # jobs are blocked on the gate
+    gate.set()                     # "host-side work" finished; release
+    results = run.wait()
+    assert run.done()
+    assert [r.value for r in results] == [1, 1]
+    assert [r.job_id for r in results] == [0, 1]  # sorted by job id
+
+
+def test_on_result_hook_fires_once_per_job():
+    seen = []
+    lock = threading.Lock()
+
+    def hook(r):
+        with lock:
+            seen.append((r.job_id, r.ok))
+
+    sched = DynamicScheduler(n_workers=3, max_retries=1, speculate=False)
+    jobs = [lambda i=i: i for i in range(4)]
+    jobs.append(lambda: (_ for _ in ()).throw(ValueError("perma-broken")))
+    sched.run(jobs, on_result=hook)
+    assert sorted(seen) == [(0, True), (1, True), (2, True), (3, True),
+                            (4, False)]
+
+
+def test_empty_submission():
+    sched = DynamicScheduler(n_workers=2)
+    assert sched.run([]) == []
+    run = sched.submit([])
+    assert run.done() and run.wait() == []

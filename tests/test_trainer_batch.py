@@ -167,3 +167,42 @@ def test_bucket_failure_marks_all_members_pessimistic(data):
     assert state.pop.trained_mask.all()
     np.testing.assert_array_equal(
         state.pop.expensive, np.ones_like(state.pop.expensive))
+
+
+def test_explicit_device_placement_is_pure_routing(data):
+    """``device=`` commits the staged arrays to one accelerator but never
+    changes the numbers: results on ``jax.devices()[0]`` equal the
+    uncommitted default bit for bit, and the compile cache keys the device
+    so per-device executables don't evict each other."""
+    import jax
+    tr, va = data
+    pop = mixed_population()
+    kw = dict(space=SPACE, steps=6, batch_size=16, lr=3e-3, seed=0)
+    ref = train_candidates_batched(pop, tr, va, **kw)
+    dev = jax.devices()[0]
+    reset_compile_cache()
+    got = train_candidates_batched(pop, tr, va, device=dev, **kw)
+    for r, g in zip(ref, got):
+        np.testing.assert_array_equal(expensive_objectives(r),
+                                      expensive_objectives(g))
+    stats = compile_cache_stats()
+    assert stats["misses"] == 2 and stats["hits"] == 0
+    train_candidates_batched(pop, tr, va, device=dev, **kw)
+    assert compile_cache_stats()["hits"] == 2
+
+
+def test_stage_cache_keys_include_device(data):
+    """The staged-dataset cache holds one entry per (length, device) — a
+    device-affine search reuses the device-resident copy across
+    generations instead of re-transferring."""
+    import jax
+    tr, va = data
+    pop = mixed_population()[:3]  # one 3-member bucket
+    cache = {}
+    kw = dict(space=SPACE, steps=2, batch_size=8, lr=3e-3, seed=0,
+              stage_cache=cache)
+    train_candidates_batched(pop, tr, va, **kw)
+    train_candidates_batched(pop, tr, va, device=jax.devices()[0], **kw)
+    devices_in_keys = {k[-1] for k in cache}
+    assert None in devices_in_keys
+    assert jax.devices()[0] in devices_in_keys
