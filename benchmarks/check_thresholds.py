@@ -5,13 +5,26 @@ the bench computed against its own same-machine baseline (overlap speedup
 vs. the synchronous loop), never absolute wall times — absolute numbers
 vary wildly across CI runners, ratios don't.
 
-Currently gates BENCH_pipeline.json (benchmarks/pipeline_bench.py):
+Gates BENCH_pipeline.json (benchmarks/pipeline_bench.py):
 
 * ``parity_ok`` must be true — the overlapped pipeline reproduced the
   synchronous trajectory bit for bit (a hard correctness gate);
 * ``speedup_async >= --min-speedup`` (default 1.2 — the bench itself
   demonstrates ~1.6-1.9x on an idle box; the CI floor leaves headroom for
   noisy shared runners while still catching a real overlap regression).
+
+Gates BENCH_serve.json (benchmarks/serve_bench.py):
+
+* ``parity_ok`` must be true — greedy tokens from both the wave-barrier
+  baseline and the continuous engine (burst AND Poisson runs) matched the
+  scalar one-request reference bit for bit;
+* ``speedup_vs_wave >= --min-serve-speedup`` (default 3.0, the ISSUE's
+  acceptance floor; the bench shows ~10-16x on an idle box);
+* ``p99_slowdown_vs_ideal <= --max-p99-slowdown`` (default 20.0): p99
+  end-to-end latency under open-loop Poisson load, as a multiple of the
+  mean *unloaded* scalar latency.  A ratio, not a wall time — the bench
+  shows ~3x; the generous ceiling only catches pathological queueing
+  (e.g. the engine degenerating to serial admission).
 
 Exit code 1 on any violation, so the build fails.
 """
@@ -47,16 +60,59 @@ def check_pipeline(path: str, min_speedup: float) -> list:
     return failures
 
 
+def check_serve(path: str, min_speedup: float,
+                max_p99_slowdown: float) -> list:
+    with open(path) as f:
+        payload = json.load(f)
+    summary = payload.get("summary")
+    if not summary:
+        return [f"{path}: no gate summary (serve_bench.py --json writes it)"]
+    failures = []
+    if not summary.get("parity_ok", False):
+        failures.append(
+            f"{path}: parity_ok={summary.get('parity_ok')} — served greedy "
+            f"tokens diverged from the scalar reference")
+    speedup = summary.get("speedup_vs_wave", 0.0)
+    if speedup < min_speedup:
+        failures.append(
+            f"{path}: speedup_vs_wave={speedup:.2f}x < floor "
+            f"{min_speedup:.2f}x — continuous-batching regression")
+    slowdown = summary.get("p99_slowdown_vs_ideal", float("inf"))
+    if slowdown > max_p99_slowdown:
+        failures.append(
+            f"{path}: p99_slowdown_vs_ideal={slowdown:.1f}x > ceiling "
+            f"{max_p99_slowdown:.1f}x — pathological queueing under "
+            f"Poisson load")
+    print(f"[gate] {path}: parity_ok={summary.get('parity_ok')} "
+          f"speedup_vs_wave={speedup:.2f}x (floor {min_speedup:.2f}x) "
+          f"p99_slowdown={slowdown:.1f}x (ceiling {max_p99_slowdown:.1f}x) "
+          f"p99={summary.get('p99_latency_ms', 0.0):.0f}ms "
+          f"slots={summary.get('slots')}")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("pipeline_json", nargs="?",
                     default="BENCH_pipeline.json",
                     help="pipeline bench result (default: "
                          "BENCH_pipeline.json)")
+    ap.add_argument("--serve-json", default=None,
+                    help="serve bench result (e.g. BENCH_serve.json); "
+                         "omit to skip the serving gate")
     ap.add_argument("--min-speedup", type=float, default=1.2,
                     help="async overlap speedup floor (default 1.2)")
+    ap.add_argument("--min-serve-speedup", type=float, default=3.0,
+                    help="continuous-batching tok/s floor vs the "
+                         "wave-barrier baseline (default 3.0)")
+    ap.add_argument("--max-p99-slowdown", type=float, default=20.0,
+                    help="p99 Poisson latency ceiling as a multiple of "
+                         "the unloaded scalar latency (default 20.0)")
     args = ap.parse_args()
     failures = check_pipeline(args.pipeline_json, args.min_speedup)
+    if args.serve_json:
+        failures += check_serve(args.serve_json, args.min_serve_speedup,
+                                args.max_p99_slowdown)
     for f in failures:
         print(f"[gate] FAIL: {f}", file=sys.stderr)
     if failures:

@@ -56,6 +56,7 @@ def main() -> None:
         nas_loop_bench,
         population_eval_bench,
         roofline_table,
+        serve_bench,
         train_bench,
     )
     rows += kernel_bench.run(log=lambda *a: print(*a, file=sys.stderr))
@@ -81,6 +82,13 @@ def main() -> None:
         train_bench.write_json(train_loop_rows, "BENCH_train_loop.json")
         print("# wrote BENCH_train_loop.json", file=sys.stderr)
     rows += _run_pipeline_bench(args)
+    serve_rows, serve_summary = serve_bench.run(
+        log=lambda *a: print(*a, file=sys.stderr), smoke=not args.full,
+        n_requests=64 if args.full else 32)
+    rows += serve_rows
+    if args.json:
+        serve_bench.write_json(serve_rows, serve_summary, "BENCH_serve.json")
+        print("# wrote BENCH_serve.json", file=sys.stderr)
     rows += roofline_table.run(log=lambda *a: print(*a, file=sys.stderr))
     roofline_table.write_markdown(log=lambda *a: print(*a, file=sys.stderr))
 

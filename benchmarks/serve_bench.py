@@ -1,0 +1,205 @@
+"""Serving bench: continuous-batching engine vs the wave-barrier baseline.
+
+Workload: N concurrent requests with mixed prompt lengths (4–24) and
+output budgets (4–24) over the reduced qwen2-0.5b zoo config.  Three runs:
+
+1. **scalar reference** — every request decoded alone through the scalar
+   path (``greedy_reference``); its tokens are the bit-parity oracle and
+   its per-request wall time is the unloaded "ideal" latency;
+2. **wave baseline** — :class:`repro.launch.serve.BatchedServer` at its
+   shipped 4 slots: admission only between waves, every slot waits for the
+   wave's slowest request;
+3. **engine** — :class:`repro.serve.ServeEngine` at ``--slots`` slots:
+   continuous admission, padding-bucketed prefill, one jitted decode step
+   over all slots.  Run once as a burst (throughput, the speedup gate) and
+   once under an open-loop Poisson arrival schedule (p50/p99 latency —
+   arrivals don't wait for the server, so queueing delay is *in* the
+   number).
+
+Gate summary (checked by benchmarks/check_thresholds.py): greedy tokens of
+both servers must match the scalar reference bit for bit, engine tok/s ≥
+3x the wave baseline, and the Poisson p99 latency must stay within a
+bounded multiple of the unloaded ideal (a relative threshold — absolute
+times vary across runners, ratios don't).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.launch.serve import BatchedServer
+from repro.models.registry import build_model
+from repro.serve import (
+    EngineConfig,
+    ServeEngine,
+    ServeRequest,
+    greedy_reference,
+    latency_stats,
+    poisson_workload,
+)
+
+ARCH = "qwen2-0.5b"
+CACHE_LEN = 64
+WAVE_SLOTS = 4          # the shipped BatchedServer default — the baseline
+PROMPT_LENS = (4, 8, 12, 16, 24)
+OUT_LENS = (4, 8, 12, 16, 24)
+
+
+def _fresh(reqs: List[ServeRequest]) -> List[ServeRequest]:
+    return [ServeRequest(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                         arrival_s=r.arrival_s) for r in reqs]
+
+
+def run(log=print, smoke: bool = True, n_requests: int = 32,
+        slots: int = 32, rate_per_s: float = 60.0,
+        seed: int = 0) -> Tuple[List[Dict], Dict]:
+    cfg = reduced_config(ARCH)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    reqs = poisson_workload(n_requests, vocab_size=cfg.vocab_size,
+                            rate_per_s=rate_per_s,
+                            prompt_lens=PROMPT_LENS, out_lens=OUT_LENS,
+                            seed=seed)
+    total_budget = sum(r.max_new for r in reqs)
+    log(f"[serve] workload: {n_requests} requests, {total_budget} token "
+        f"budget, prompts {min(len(r.prompt) for r in reqs)}-"
+        f"{max(len(r.prompt) for r in reqs)}")
+
+    # -- scalar reference: parity oracle + unloaded ideal latency ---------
+    dec = jax.jit(bundle.decode_step)
+    ref_tokens: Dict[int, List[int]] = {}
+    for r in reqs:   # warm the per-prompt-length prefill compiles
+        greedy_reference(bundle, params, r.prompt, 1, CACHE_LEN,
+                         decode_jit=dec)
+    ideal: Dict[int, float] = {}
+    t0 = time.perf_counter()
+    for r in reqs:
+        t = time.perf_counter()
+        ref_tokens[r.rid] = greedy_reference(bundle, params, r.prompt,
+                                             r.max_new, CACHE_LEN,
+                                             decode_jit=dec)
+        ideal[r.rid] = time.perf_counter() - t
+    t_scalar = time.perf_counter() - t0
+    ideal_mean = float(np.mean(list(ideal.values())))
+    log(f"[serve] scalar reference: {total_budget / t_scalar:.1f} tok/s, "
+        f"ideal latency {ideal_mean * 1e3:.1f} ms/request")
+
+    # -- wave-barrier baseline (shipped defaults) -------------------------
+    wave = BatchedServer(bundle, params, slots=WAVE_SLOTS,
+                         cache_len=CACHE_LEN)
+    wave.run(_fresh(reqs)[:WAVE_SLOTS], log=lambda *_: None)  # warm
+    wave_reqs = _fresh(reqs)
+    t0 = time.perf_counter()
+    wave_done = wave.run(wave_reqs, log=lambda *_: None)
+    t_wave = time.perf_counter() - t0
+    wave_tokens = sum(len(r.out) for r in wave_done)
+    tok_s_wave = wave_tokens / t_wave
+    wave_parity = all(r.out == ref_tokens[r.rid] for r in wave_done)
+    log(f"[serve] wave baseline ({WAVE_SLOTS} slots): {tok_s_wave:.1f} "
+        f"tok/s, parity={wave_parity}")
+
+    # -- engine: burst throughput -----------------------------------------
+    engine = ServeEngine(bundle, params, EngineConfig(
+        slots=slots, cache_len=CACHE_LEN, pad_to=8, max_prefill_batch=8))
+    burst = _fresh(reqs)
+    for r in burst:
+        r.arrival_s = 0.0
+    engine.run(_fresh(burst))          # warm (compile all buckets)
+    t0 = time.perf_counter()
+    burst_done = engine.run(burst)
+    t_burst = time.perf_counter() - t0
+    burst_tokens = sum(len(r.out) for r in burst_done)
+    tok_s_engine = burst_tokens / t_burst
+    engine_parity = all(r.out == ref_tokens[r.rid] for r in burst_done)
+    speedup = tok_s_engine / tok_s_wave
+    log(f"[serve] engine burst ({slots} slots): {tok_s_engine:.1f} tok/s "
+        f"({speedup:.2f}x wave), parity={engine_parity}, "
+        f"{engine.prefill_calls} prefill dispatches, "
+        f"{engine.decode_steps} decode steps")
+
+    # -- engine: open-loop Poisson latency --------------------------------
+    poisson_done = engine.run(_fresh(reqs), realtime=True)
+    stats = latency_stats(poisson_done,
+                          makespan_s=max(r.t_done for r in poisson_done))
+    poisson_parity = all(r.out == ref_tokens[r.rid] for r in poisson_done)
+    p99_slowdown = stats["p99_latency_s"] / ideal_mean if ideal_mean else 0.0
+    log(f"[serve] engine poisson (rate={rate_per_s}/s): "
+        f"p50={stats['p50_latency_s'] * 1e3:.1f}ms "
+        f"p99={stats['p99_latency_s'] * 1e3:.1f}ms "
+        f"({p99_slowdown:.1f}x unloaded ideal), parity={poisson_parity}")
+
+    parity_ok = bool(wave_parity and engine_parity and poisson_parity)
+    rows = [
+        {"name": "serve_scalar_reference",
+         "us_per_call": t_scalar * 1e6 / total_budget,
+         "derived": f"tok_per_s={total_budget / t_scalar:.1f} "
+                    f"ideal_ms={ideal_mean * 1e3:.2f}"},
+        {"name": f"serve_wave_{WAVE_SLOTS}slots",
+         "us_per_call": t_wave * 1e6 / wave_tokens,
+         "derived": f"tok_per_s={tok_s_wave:.1f} parity={wave_parity}"},
+        {"name": f"serve_engine_{slots}slots",
+         "us_per_call": t_burst * 1e6 / burst_tokens,
+         "derived": f"tok_per_s={tok_s_engine:.1f} "
+                    f"speedup={speedup:.2f}x parity={engine_parity}"},
+        {"name": "serve_engine_poisson",
+         "us_per_call": stats["p99_latency_s"] * 1e6,
+         "derived": f"p50_ms={stats['p50_latency_s'] * 1e3:.1f} "
+                    f"p99_ms={stats['p99_latency_s'] * 1e3:.1f} "
+                    f"p99_slowdown={p99_slowdown:.1f}x "
+                    f"tok_per_s={stats['tok_per_s']:.1f}"},
+    ]
+    summary = {
+        "parity_ok": parity_ok,
+        "speedup_vs_wave": float(speedup),
+        "tok_s_engine": float(tok_s_engine),
+        "tok_s_wave": float(tok_s_wave),
+        "p50_latency_ms": stats["p50_latency_s"] * 1e3,
+        "p99_latency_ms": stats["p99_latency_s"] * 1e3,
+        "p99_slowdown_vs_ideal": float(p99_slowdown),
+        "n_requests": n_requests,
+        "slots": slots,
+        "rate_per_s": rate_per_s,
+    }
+    return rows, summary
+
+
+def write_json(rows: List[Dict], summary: Optional[Dict],
+               path: str) -> None:
+    payload = {"bench": "serve", "rows": rows}
+    if summary is not None:
+        payload["summary"] = summary
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="64 requests (default: 32)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=60.0,
+                    help="Poisson arrival rate for the latency run")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows + gate summary as JSON")
+    args = ap.parse_args()
+    n = args.requests or (64 if args.full else 32)
+    log = lambda *a: print(*a, file=sys.stderr)  # noqa: E731
+    rows, summary = run(log=log, smoke=not args.full, n_requests=n,
+                        slots=args.slots, rate_per_s=args.rate)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    if args.json:
+        write_json(rows, summary, args.json)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -67,6 +67,33 @@ def main():
           f" samples/s @ {compiled.estimate_min.p_total_w:.2f} W | max-alpha "
           f"{compiled.estimate_max.throughput_sps:.0f} samples/s @ "
           f"{compiled.estimate_max.p_total_w:.2f} W")
+
+    # -- serving the deployment artifact (repro.serve, DESIGN.md §12) --
+    # One jitted deployment-mode forward answers batched requests; inputs
+    # at full resolution are decimated to the genome's input length and
+    # the batch is padded to a power of two so repeated serving reuses a
+    # handful of compiled executables.  The full closed loop — winner
+    # *trained to convergence* before compiling — is
+    # examples/serve_winner.py.
+    print("\n== serving batched requests through the compiled forward ==")
+    from repro.core.trainer import forward
+    from repro.serve import ServableWinner
+    winner = ServableWinner(
+        genome=sol.genome, compiled=compiled, goal=None,
+        input_length=sol.genome.input_length(),
+        train_meta={"detection_rate": float("nan"),
+                    "false_alarm_rate": float("nan"), "val_loss": 0.0,
+                    "steps": 0.0},
+        _predict=jax.jit(lambda xb: forward(compiled.params, specs, xb,
+                                            quant=None, train=False)))
+    t = time.time()
+    preds = winner.classify(data_val[0][:32])
+    dt = time.time() - t
+    t = time.time()
+    winner.classify(data_val[0][32:64])
+    dt_warm = time.time() - t
+    print(f"   32-window batch: {dt*1e3:.0f} ms cold (compile), "
+          f"{dt_warm*1e3:.0f} ms warm; classes={np.bincount(preds).tolist()}")
     print(f"total {time.time()-t0:.1f}s")
 
 

@@ -103,6 +103,27 @@ from repro.core.trainer_batch import (
 
 PIPELINE_MODES = ("off", "host_overlap", "async")
 
+# max/min per-device busy ratio above which a generation's training jobs
+# are considered skewed enough to flag (device-affine bucket sharding can
+# pin all the big signature buckets to one device — DESIGN.md §11)
+DEVICE_IMBALANCE_RATIO = 2.0
+
+
+def device_imbalance(device_busy: Dict[str, float],
+                     *, min_busy_s: float = 1e-3) -> Optional[float]:
+    """Max/min busy-time ratio across devices for one generation, or
+    ``None`` when imbalance is meaningless (fewer than 2 devices, or the
+    generation did next to no device work).  A device that stayed (almost)
+    idle while others trained reports ``inf`` — the worst skew."""
+    if len(device_busy) < 2:
+        return None
+    busy = sorted(device_busy.values())
+    if busy[-1] < min_busy_s:
+        return None
+    if busy[0] < min_busy_s:
+        return float("inf")
+    return busy[-1] / busy[0]
+
 
 @dataclasses.dataclass
 class NASConfig:
@@ -551,6 +572,15 @@ class EvolutionarySearch:
         }
         if pipeline is not None:
             rec["pipeline"] = pipeline
+        imb = device_imbalance(device_busy)
+        if imb is not None and imb > DEVICE_IMBALANCE_RATIO:
+            rec["device_imbalance"] = imb
+            busy_fmt = {k: round(v, 3)
+                        for k, v in sorted(device_busy.items())}
+            self.log(f"[nas] WARNING gen {state.generation}: device busy "
+                     f"imbalance {imb:.1f}x (max/min, threshold "
+                     f"{DEVICE_IMBALANCE_RATIO:.1f}x) — signature buckets "
+                     f"are skewing onto few devices; busy={busy_fmt}")
         state.history.append(rec)
         state.pop = new_pop
         self.log(f"[nas] gen {rec['generation']:3d} "

@@ -1,18 +1,22 @@
-"""Serving driver: batched prefill + decode with continuous request slots.
+"""Serving driver: wave-batched baseline + the continuous-batching engine.
 
-A minimal production-shaped server loop: requests queue up, get packed into
-fixed prefill batches, and finished sequences release their slot for the
-next request (slot-based continuous batching).  On TPU the same functions
-are jitted with the production mesh sharding (launch/dryrun.py proves the
-decode-step sharding compiles at 256/512 chips).
+:class:`BatchedServer` is the historical wave-barrier loop kept as the
+serving baseline (and the benchmark's reference point): requests are packed
+into waves, every slot decodes until the whole wave finishes, then the next
+wave is admitted.  It now runs on the slot-cache path — each slot owns its
+own sequence length — which fixes the old shared-``cache["len"]`` bug
+(mixed prompt lengths in one wave conflated slot positions, so decode read
+stale cache rows; tests/test_serve.py keeps the regression covered).
+
+The production path is :class:`repro.serve.ServeEngine` (continuous
+admission, bucketed prefill, no wave barrier — DESIGN.md §12):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
-      --requests 12 --max-new 16
+      --requests 12 --max-new 16 --engine
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 from typing import List, Optional
 
@@ -22,63 +26,63 @@ import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, reduced_config
 from repro.models.registry import build_model
+from repro.serve.engine import EngineConfig, ServeEngine, ServeRequest
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # (len,) int32
-    max_new: int
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+# re-export: Request predates ServeRequest and external callers import it
+# from here
+Request = ServeRequest
 
 
 class BatchedServer:
-    """Slot-based continuous batching over (prefill, decode_step)."""
+    """Wave-barrier batching over the slot-cache (prefill, decode) path.
+
+    Admission happens only between waves (the historical behaviour, kept
+    as the baseline the continuous engine is benchmarked against), but
+    slot state is correct: per-slot lengths, per-slot masking — a wave may
+    mix prompt lengths freely."""
 
     def __init__(self, bundle, params, *, slots: int = 4,
                  cache_len: int = 256, seed: int = 0):
+        if bundle.decode_slotted is None:
+            raise ValueError(f"family {bundle.cfg.family!r} has no slotted "
+                             f"serving path")
         self.bundle = bundle
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
-        self.active: List[Optional[Request]] = [None] * slots
-        self.cache = bundle.make_cache(slots, cache_len)
-        self._decode = jax.jit(bundle.decode_step)
+        self.active: List[Optional[ServeRequest]] = [None] * slots
+        self.cache = bundle.make_slot_cache(slots, cache_len)
+        self._decode = jax.jit(lambda p, c, t, a: bundle.decode_slotted(
+            p, c, {"tokens": t, "active": a}))
+        self._prefill = jax.jit(lambda p, t, l: bundle.prefill_slotted(
+            p, {"tokens": t, "lens": l, "cache_len": cache_len}))
+        self._specs = {k: v for k, v in bundle.cache_specs().items()
+                       if k != "len"}
 
-    def _prefill_slot(self, slot: int, req: Request):
-        """Prefill one request and splice its caches into the batch cache.
-
-        Production note: real servers prefill in their own batch and merge;
-        here we prefill slot-by-slot (batch 1) for clarity, then write the
-        slot's cache rows in place."""
+    def _prefill_slot(self, slot: int, req: ServeRequest):
+        """Prefill one request (batch 1 — the baseline keeps the historical
+        slot-by-slot admission) and splice its cache rows into the slot."""
         toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        logits, cache1 = self.bundle.prefill(
-            self.params, {"tokens": toks, "cache_len": self.cache_len})
-
-        def splice(big, one):
-            if one.ndim == 0:
-                return big
-            # batch axis position differs per cache layout; match by size
-            for ax in range(one.ndim):
-                if one.shape[ax] == 1 and big.shape[ax] == self.slots:
-                    idx = [slice(None)] * one.ndim
-                    idx[ax] = slice(slot, slot + 1)
-                    return big.at[tuple(idx)].set(one)
-            return big
-
-        self.cache = jax.tree_util.tree_map(splice, self.cache, cache1)
-        # NOTE: cache["len"] is shared across slots in this minimal server —
-        # requests are packed per round, so all active slots share a length.
-        self.cache["len"] = cache1["len"]
+        lens = jnp.asarray([len(req.prompt)], jnp.int32)
+        logits, cache1 = self._prefill(self.params, toks, lens)
+        idx = jnp.asarray([slot])
+        cache = dict(self.cache)
+        for key, spec in self._specs.items():
+            ax = spec.index("batch")
+            sl = (slice(None),) * ax + (idx,)
+            cache[key] = cache[key].at[sl].set(cache1[key])
+        cache["lens"] = cache["lens"].at[idx].set(cache1["lens"])
+        self.cache = cache
         req.out.append(int(jnp.argmax(logits[0])))
 
-    def run(self, requests: List[Request], log=print) -> List[Request]:
+    def run(self, requests: List[ServeRequest], log=print
+            ) -> List[ServeRequest]:
         pending = list(requests)
-        finished: List[Request] = []
+        finished: List[ServeRequest] = []
         round_no = 0
+        last_tok = np.zeros((self.slots,), np.int32)
         while pending or any(self.active):
-            # fill free slots with a fresh wave of equal-length prompts
+            # fill free slots with a fresh wave (barrier: only between waves)
             wave = []
             for s in range(self.slots):
                 if self.active[s] is None and pending:
@@ -87,23 +91,24 @@ class BatchedServer:
                     wave.append((s, req))
             for s, req in wave:
                 self._prefill_slot(s, req)
+                last_tok[s] = req.out[-1]
             # decode until every active request finished its budget
             while any(r is not None and not r.done for r in self.active):
-                toks = np.zeros((self.slots, 1), np.int32)
-                for s, r in enumerate(self.active):
-                    if r is not None and r.out:
-                        toks[s, 0] = r.out[-1]
+                act = np.array([r is not None and not r.done
+                                for r in self.active])
                 logits, self.cache = self._decode(
-                    self.params, self.cache, {"tokens": jnp.asarray(toks)})
+                    self.params, self.cache,
+                    jnp.asarray(last_tok[:, None]), jnp.asarray(act))
                 nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                lens = np.asarray(self.cache["lens"])
                 for s, r in enumerate(self.active):
                     if r is None or r.done:
                         continue
                     r.out.append(int(nxt[s]))
-                    if len(r.out) >= r.max_new:
+                    last_tok[s] = nxt[s]
+                    if len(r.out) >= r.max_new or \
+                            int(lens[s]) >= self.cache_len:
                         r.done = True
-                if int(self.cache["len"]) >= self.cache_len:
-                    break
             for s, r in enumerate(self.active):
                 if r is not None and r.done:
                     finished.append(r)
@@ -111,10 +116,6 @@ class BatchedServer:
             round_no += 1
             log(f"[serve] round {round_no}: finished={len(finished)} "
                 f"pending={len(pending)}")
-            # reset shared cache between waves (slot lengths are shared)
-            if any(self.active):
-                continue
-            self.cache = self.bundle.make_cache(self.slots, self.cache_len)
         return finished
 
 
@@ -125,20 +126,30 @@ def main(argv=None) -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--engine", action="store_true",
+                    help="use the continuous-batching ServeEngine instead "
+                         "of the wave-barrier baseline")
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     bundle = build_model(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size, 12).astype(
-                        np.int32),
-                    max_new=args.max_new)
+    reqs = [ServeRequest(rid=i,
+                         prompt=rng.integers(0, cfg.vocab_size, 12).astype(
+                             np.int32),
+                         max_new=args.max_new)
             for i in range(args.requests)]
-    server = BatchedServer(bundle, params, slots=args.slots, cache_len=64)
     t0 = time.time()
-    done = server.run(reqs)
+    if args.engine:
+        engine = ServeEngine(bundle, params, EngineConfig(
+            slots=args.slots, cache_len=64,
+            pad_to=8 if bundle.prefill_pads else 1))
+        done = engine.run(reqs)
+    else:
+        server = BatchedServer(bundle, params, slots=args.slots,
+                               cache_len=64)
+        done = server.run(reqs)
     dt = time.time() - t0
     total_tokens = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens "

@@ -121,15 +121,21 @@ def chunked_attention(
         # decode fast path: no scan — scores are only (B, H, Sk), and the
         # softmax/contraction reductions over a sharded Sk lower to clean
         # psum patterns under SPMD (no dynamic slicing of sharded dims).
+        # ``kv_len`` may be a scalar (all rows share a length) or a (B,)
+        # vector (per-slot lengths — the serving engine's slotted decode).
         scale = 1.0 / (hd ** 0.5)
         qg = q.reshape(b, kvh, rep, hd).astype(jnp.float32) * scale
         s = jnp.einsum("bgrd,bcgd->bgrc", qg, k.astype(jnp.float32))
         k_pos = jnp.arange(sk)
-        limit = sk if kv_len is None else kv_len
-        mask = k_pos < limit
-        if causal and q_offset is not None and kv_len is None:
-            mask = mask & (k_pos <= q_offset)
-        s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+        if kv_len is not None and jnp.ndim(kv_len) == 1:
+            mask = k_pos[None, :] < kv_len[:, None]            # (B, Sk)
+            s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        else:
+            limit = sk if kv_len is None else kv_len
+            mask = k_pos < limit
+            if causal and q_offset is not None and kv_len is None:
+                mask = mask & (k_pos <= q_offset)
+            s = jnp.where(mask[None, None, None, :], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bgrc,bcgd->bgrd", p, v.astype(jnp.float32))
         return out.reshape(b, 1, h, hd).astype(q.dtype)
@@ -274,6 +280,53 @@ def attention_decode(
     v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=1)
     out = chunked_attention(q, k_cache, v_cache, causal=False,
                             chunk=cfg.attn_chunk, kv_len=pos + 1)
+    y = out.reshape(b, 1, -1) @ p["o"].astype(x.dtype)
+    return y, k_cache, v_cache
+
+
+def attention_decode_slotted(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                 # (B, 1, D)
+    k_cache: jnp.ndarray,           # (B, S_max, KVH, hd)
+    v_cache: jnp.ndarray,
+    lens: jnp.ndarray,              # (B,) int32: per-slot current lengths
+    cfg: ModelConfig,
+    use_rope: bool = True,
+):
+    """One decode step with independent per-slot sequence lengths.
+
+    Each batch row is a serving slot at its own position: RoPE is applied at
+    ``lens[b]``, the new KV row is scattered at ``lens[b]`` (clamped so a
+    finished slot at the cache boundary overwrites its own dead tail rather
+    than a neighbour), and attention masks each row to its own valid prefix.
+    On TPU the masked contraction is the Pallas decode-attention kernel
+    (kernels/decode_attention — per-row ``kv_len`` is a scalar-prefetch
+    operand there); elsewhere it is the same jnp fast path the scalar decode
+    uses, so batch rows are bit-identical to a one-request decode.
+
+    Returns (out, k_cache, v_cache).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)
+    if use_rope:
+        if cfg.mrope:
+            positions = jnp.broadcast_to(lens[None, :, None], (3, b, 1))
+        else:
+            positions = lens[:, None]
+        q, k = _rotate(q, k, positions, cfg)
+    pos_w = jnp.minimum(lens, k_cache.shape[1] - 1)
+    upd = jax.vmap(lambda c, one, pw: jax.lax.dynamic_update_slice_in_dim(
+        c, one, pw, axis=0))
+    k_cache = upd(k_cache, k, pos_w)
+    v_cache = upd(v_cache, v, pos_w)
+    kv_len = lens + 1
+    if jax.default_backend() == "tpu":
+        from repro.kernels.decode_attention.ops import decode_attention
+        out = decode_attention(q[:, 0], k_cache, v_cache, kv_len,
+                               interpret=False)[:, None]
+    else:
+        out = chunked_attention(q, k_cache, v_cache, causal=False,
+                                chunk=cfg.attn_chunk, kv_len=kv_len)
     y = out.reshape(b, 1, -1) @ p["o"].astype(x.dtype)
     return y, k_cache, v_cache
 

@@ -23,6 +23,7 @@ from repro.distributed.sharding import logical_constraint
 from repro.models.attention import (
     attention_block,
     attention_decode,
+    attention_decode_slotted,
     attention_prefill,
     attention_specs,
     init_attention,
@@ -218,6 +219,78 @@ def hybrid_cache_specs(cfg: ModelConfig):
             "v": ("layer_groups", "batch", None, "kv_heads", "head_dim"),
         })
     return specs
+
+
+def init_hybrid_slot_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Slot-cache layout: per-slot ``lens`` instead of the shared ``len``.
+    Conv/SSM states are already per-row; only the shared block's KV cache
+    and the RoPE position need the per-slot length."""
+    cache = init_hybrid_cache(cfg, batch, cache_len)
+    del cache["len"]
+    cache["lens"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def hybrid_prefill_slotted(params, cfg: ModelConfig, *, tokens, lens,
+                           cache_len: int):
+    """Exact-length bucket prefill (SSM states fold every input token, so
+    right-padding would corrupt them — the engine groups hybrid prompts by
+    exact length; ``lens`` must equal the batch's shared sequence length)."""
+    logits, cache = hybrid_prefill(params, cfg, tokens=tokens,
+                                   cache_len=cache_len)
+    del cache["len"]
+    cache["lens"] = jnp.broadcast_to(
+        jnp.asarray(tokens.shape[1], jnp.int32), (tokens.shape[0],))
+    return logits, cache
+
+
+def hybrid_decode_step_slotted(params, cache, tokens, active,
+                               cfg: ModelConfig):
+    """One decode token per slot with independent per-slot lengths.
+
+    Mamba conv/SSM state updates are row-local, so inactive slots just
+    churn dead state that the next prefill replaces wholesale; the shared
+    attention block scatters/masks at each slot's own position."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    lens = cache["lens"]
+
+    def mamba_step(x_, layer):
+        lp, conv_s, ssm_s = layer
+        h = apply_norm(cfg.norm, x_, lp["norm"], cfg.norm_eps)
+        y, conv_s, ssm_s = mamba2_decode(lp["mamba"], h, conv_s, ssm_s, cfg)
+        return x_ + y, (conv_s, ssm_s)
+
+    new_cache = {"lens": lens + active.astype(jnp.int32)}
+    if "groups" in params:
+        shared = params["shared"]
+
+        def group_step(x_, layer):
+            gp, conv_s, ssm_s, kc, vc = layer
+            x_, (conv_new, ssm_new) = jax.lax.scan(
+                mamba_step, x_, (gp, conv_s, ssm_s))
+            h = apply_norm(cfg.norm, x_, shared["attn_norm"], cfg.norm_eps)
+            a, kc, vc = attention_decode_slotted(shared["attn"], h, kc, vc,
+                                                 lens, cfg)
+            x_ = x_ + a
+            x_ = x_ + mlp_block(shared["mlp"],
+                                apply_norm(cfg.norm, x_, shared["mlp_norm"],
+                                           cfg.norm_eps), cfg)
+            return x_, (conv_new, ssm_new, kc, vc)
+
+        x, (conv_g, ssm_g, k_all, v_all) = jax.lax.scan(
+            group_step, x,
+            (params["groups"], cache["conv"], cache["ssm"],
+             cache["k"], cache["v"]))
+        new_cache.update({"conv": conv_g, "ssm": ssm_g,
+                          "k": k_all, "v": v_all})
+    conv_t, ssm_t = cache["conv_tail"], cache["ssm_tail"]
+    if "tail" in params:
+        x, (conv_t, ssm_t) = jax.lax.scan(
+            mamba_step, x, (params["tail"], conv_t, ssm_t))
+    x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["unembed"].astype(x.dtype))[:, 0]
+    new_cache.update({"conv_tail": conv_t, "ssm_tail": ssm_t})
+    return logits, new_cache
 
 
 def hybrid_decode_step(params, cache, tokens, cfg: ModelConfig):

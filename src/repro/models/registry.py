@@ -42,6 +42,23 @@ class ModelBundle:
     apply_hidden: Optional[Callable[[Any, Dict[str, Any]],
                                     Tuple[jnp.ndarray, jnp.ndarray]]] = None
     unembed_chunk: Optional[Callable[[Any, jnp.ndarray], jnp.ndarray]] = None
+    # slot-cache serving path (repro.serve, DESIGN.md §12): independent
+    # per-slot sequence lengths — the cache carries ``lens: (slots,)``
+    # instead of one shared scalar ``len``.
+    # * ``prefill_slotted(params, {"tokens": (B, L), "lens": (B,),
+    #   "cache_len": int}) -> (last-real-token logits (B, V), slot cache)``
+    # * ``decode_slotted(params, cache, {"tokens": (B, 1),
+    #   "active": (B,) bool}) -> (logits (B, V), slot cache)``
+    # * ``make_slot_cache(slots, cache_len) -> slot cache``
+    # ``prefill_pads`` says whether prefill_slotted accepts right-padded
+    # prompts (lens[b] < L) — attention families do; SSM states fold every
+    # token so hybrid buckets must be exact-length.
+    prefill_slotted: Optional[Callable[[Any, Dict[str, Any]],
+                                       Tuple[jnp.ndarray, Any]]] = None
+    decode_slotted: Optional[Callable[[Any, Any, Dict[str, Any]],
+                                      Tuple[jnp.ndarray, Any]]] = None
+    make_slot_cache: Optional[Callable[[int, int], Any]] = None
+    prefill_pads: bool = False
 
     # ------------------------------------------------------------ dry-run io
     def input_specs(self, cell: ShapeCell) -> Tuple[Dict[str, Any],
@@ -119,6 +136,15 @@ def _lm_bundle(cfg: ModelConfig) -> ModelBundle:
                               embeds=batch.get("embeds"),
                               positions=batch.get("positions"))
 
+    def prefill_slotted(params, batch):
+        return M_lm.lm_prefill_slotted(params, cfg, tokens=batch["tokens"],
+                                       lens=batch["lens"],
+                                       cache_len=batch["cache_len"])
+
+    def decode_slotted(params, cache, batch):
+        return M_lm.lm_decode_step_slotted(params, cache, batch["tokens"],
+                                           batch["active"], cfg)
+
     return ModelBundle(
         cfg=cfg,
         init=lambda rng: M_lm.init_lm(rng, cfg),
@@ -130,6 +156,10 @@ def _lm_bundle(cfg: ModelConfig) -> ModelBundle:
         cache_specs=lambda: M_lm.cache_specs(cfg),
         apply_hidden=apply_hidden,
         unembed_chunk=lambda params, x: M_lm.unembed(params, x, cfg),
+        prefill_slotted=prefill_slotted,
+        decode_slotted=decode_slotted,
+        make_slot_cache=lambda b, s: M_lm.init_slot_cache(cfg, b, s),
+        prefill_pads=True,
     )
 
 
@@ -145,6 +175,15 @@ def _hybrid_bundle(cfg: ModelConfig) -> ModelBundle:
         return M_hybrid.hybrid_decode_step(params, cache, batch["tokens"],
                                            cfg)
 
+    def prefill_slotted(params, batch):
+        return M_hybrid.hybrid_prefill_slotted(
+            params, cfg, tokens=batch["tokens"], lens=batch["lens"],
+            cache_len=batch["cache_len"])
+
+    def decode_slotted(params, cache, batch):
+        return M_hybrid.hybrid_decode_step_slotted(
+            params, cache, batch["tokens"], batch["active"], cfg)
+
     return ModelBundle(
         cfg=cfg,
         init=lambda rng: M_hybrid.init_hybrid(rng, cfg),
@@ -158,6 +197,11 @@ def _hybrid_bundle(cfg: ModelConfig) -> ModelBundle:
             params, cfg, tokens=batch["tokens"]),
         unembed_chunk=lambda params, x: M_hybrid.hybrid_unembed(
             params, x, cfg),
+        prefill_slotted=prefill_slotted,
+        decode_slotted=decode_slotted,
+        make_slot_cache=lambda b, s: M_hybrid.init_hybrid_slot_cache(
+            cfg, b, s),
+        prefill_pads=False,
     )
 
 

@@ -24,6 +24,7 @@ from repro.distributed.sharding import logical_constraint
 from repro.models.attention import (
     attention_block,
     attention_decode,
+    attention_decode_slotted,
     attention_prefill,
     attention_specs,
     init_attention,
@@ -238,6 +239,94 @@ def lm_prefill(
     cache = {"k": k_all, "v": v_all,
              "len": jnp.asarray(s, jnp.int32)}
     return logits, cache
+
+
+def init_slot_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                    dtype=None) -> Dict[str, Any]:
+    """Slot-cache layout (serving engine): like :func:`init_cache` but with
+    independent per-slot lengths ``lens: (batch,)`` instead of one shared
+    scalar ``len`` — each batch row is a serving slot at its own position."""
+    cache = init_cache(cfg, batch, cache_len, dtype)
+    del cache["len"]
+    cache["lens"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def lm_prefill_slotted(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    *,
+    tokens: jnp.ndarray,          # (B, L) right-padded prompts
+    lens: jnp.ndarray,            # (B,) true prompt lengths (<= L)
+    cache_len: int,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Bucket prefill: prompts right-padded to a shared length ``L``.
+
+    Causality keeps each row's first ``lens[b]`` positions independent of
+    the pad tail, so the gathered last-real-token logits and the cache rows
+    ``< lens[b]`` are exact; pad-tail KV rows hold garbage but stay masked
+    forever because the slot's length is ``lens[b]``.  Returns per-row
+    last-real-token logits ``(B, V)`` and a slot cache (``lens`` per row).
+    """
+    x = embed_tokens(params, tokens, cfg)
+    x = logical_constraint(x, "batch", "seq", None)
+
+    def scan_body(x_, lp):
+        h = apply_norm(cfg.norm, x_, lp["attn_norm"], cfg.norm_eps)
+        a, (kc, vc) = attention_prefill(lp["attn"], h, cfg, cache_len)
+        h = x_ + a
+        hn = apply_norm(cfg.norm, h, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_block(lp["moe"], hn, cfg)
+        else:
+            y = mlp_block(lp["mlp"], hn, cfg)
+        out = logical_constraint(h + y, "batch", "seq", None)
+        return out, (kc, vc)
+
+    x, (k_all, v_all) = jax.lax.scan(scan_body, x, params["layers"])
+    last = jnp.take_along_axis(
+        x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)  # (B, 1, D)
+    last = apply_norm(cfg.norm, last, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, last, cfg)[:, 0]
+    cache = {"k": k_all, "v": v_all, "lens": lens.astype(jnp.int32)}
+    return logits, cache
+
+
+def lm_decode_step_slotted(
+    params: Dict[str, Any],
+    cache: Dict[str, Any],        # slot cache: k/v + "lens" (B,)
+    tokens: jnp.ndarray,          # (B, 1) int32
+    active: jnp.ndarray,          # (B,) bool: rows that hold a live request
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One decode step over every slot with independent lengths.
+
+    Inactive slots still flow through the batch (their output logits are
+    garbage and ignored by the engine) but their length does not advance,
+    so the next admission's prefill overwrites a clean slot."""
+    x = embed_tokens(params, tokens, cfg)
+    lens = cache["lens"]
+
+    def scan_body(x_, layer):
+        lp, kc, vc = layer
+        h = apply_norm(cfg.norm, x_, lp["attn_norm"], cfg.norm_eps)
+        a, kc_new, vc_new = attention_decode_slotted(lp["attn"], h, kc, vc,
+                                                     lens, cfg)
+        h = x_ + a
+        hn = apply_norm(cfg.norm, h, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_block(lp["moe"], hn, cfg)
+        else:
+            y = mlp_block(lp["mlp"], hn, cfg)
+        return h + y, (kc_new, vc_new)
+
+    x, (k_all, v_all) = jax.lax.scan(
+        scan_body, x, (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)[:, 0]
+    new_cache = {"k": k_all, "v": v_all,
+                 "lens": lens + active.astype(jnp.int32)}
+    return logits, new_cache
 
 
 def lm_decode_step(

@@ -1,0 +1,31 @@
+"""Continuous-batching inference serving (DESIGN.md §12).
+
+* :class:`~repro.serve.engine.ServeEngine` — slot-cache continuous
+  batching over a ModelBundle's slotted prefill/decode path.
+* :mod:`repro.serve.loadgen` — open-loop Poisson workloads + latency stats.
+* :func:`~repro.serve.winner.serve_winner` — genome front-end: NAS winner
+  → train → compile → serve (search → implement → deploy).
+"""
+from repro.serve.buckets import PrefillBucket, build_buckets
+from repro.serve.engine import (
+    EngineConfig,
+    ServeEngine,
+    ServeRequest,
+    greedy_reference,
+)
+from repro.serve.loadgen import latency_stats, poisson_workload
+from repro.serve.winner import ServableWinner, compile_winner, serve_winner
+
+__all__ = [
+    "EngineConfig",
+    "PrefillBucket",
+    "ServableWinner",
+    "ServeEngine",
+    "ServeRequest",
+    "build_buckets",
+    "compile_winner",
+    "greedy_reference",
+    "latency_stats",
+    "poisson_workload",
+    "serve_winner",
+]

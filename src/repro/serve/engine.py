@@ -1,0 +1,268 @@
+"""Continuous-batching inference engine over slot caches (DESIGN.md §12).
+
+The production serving loop for search winners and the LM zoo: requests are
+admitted into per-slot cache rows the moment a slot frees (no wave
+barrier), prefill runs in padding-bucketed batches (serve/buckets.py), and
+decode is ONE jitted step over all slots per iteration — every batch row is
+a slot at its own sequence position (``cache["lens"]``), so mixed prompt
+and output lengths coexist in flight.
+
+Greedy decode through the engine is bit-identical per request to a scalar
+one-request reference (:func:`greedy_reference`): every model op on the
+batch axis is row-local, prefill buckets right-pad (masked contributions
+are exact zeros), and the slotted decode step shares the scalar path's
+arithmetic (models/attention.py).
+
+Wall-clock behaviour: ``run(requests)`` honours each request's
+``arrival_s`` (open-loop load — the Poisson generator in serve/loadgen.py);
+``realtime=False`` collapses arrivals to "already queued" for deterministic
+tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.buckets import build_buckets
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One inference request and its measured lifecycle."""
+
+    rid: int
+    prompt: np.ndarray             # (len,) int32
+    max_new: int
+    arrival_s: float = 0.0         # offset from the run's t0 (open loop)
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    # measured lifecycle (seconds from the run's t0)
+    t_arrival: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0           # first token emitted (prefill argmax)
+    t_done: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_arrival
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first - self.t_arrival
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    slots: int = 8                 # concurrent sequences in flight
+    cache_len: int = 256           # per-slot KV/state capacity
+    pad_to: int = 8                # prompt-length bucket granularity
+    max_prefill_batch: int = 8     # rows per prefill dispatch
+    max_wait: int = 0              # admission rounds a ready request may be
+    #   held to fill a denser bucket (0 = admit immediately; latency knob)
+
+
+class ServeEngine:
+    """Slot-cache continuous batching over a ModelBundle's slotted path."""
+
+    def __init__(self, bundle, params, config: Optional[EngineConfig] = None):
+        cfg = config or EngineConfig()
+        if bundle.decode_slotted is None or bundle.prefill_slotted is None:
+            raise ValueError(
+                f"family {bundle.cfg.family!r} has no slotted serving path "
+                f"(supported: decoder-only LM and SSM/hybrid families)")
+        if cfg.pad_to > 1 and not bundle.prefill_pads:
+            raise ValueError(
+                f"family {bundle.cfg.family!r} folds every prompt token "
+                f"into running state — right-padded prefill buckets would "
+                f"corrupt it; use pad_to=1 (exact-length buckets)")
+        self.bundle = bundle
+        self.params = params
+        self.cfg = cfg
+        self._specs = {k: v for k, v in bundle.cache_specs().items()
+                       if k != "len"}
+
+        def _prefill(params, tokens, lens):
+            return bundle.prefill_slotted(
+                params, {"tokens": tokens, "lens": lens,
+                         "cache_len": cfg.cache_len})
+
+        def _decode(params, cache, tokens, active):
+            return bundle.decode_slotted(
+                params, cache, {"tokens": tokens, "active": active})
+
+        def _splice(cache, cache1, slot_idx):
+            # scatter each prefill row's cache into its slot; rows whose
+            # slot index is out of range (batch padding) are dropped
+            out = dict(cache)
+            for key, spec in self._specs.items():
+                ax = spec.index("batch")
+                idx = (slice(None),) * ax + (slot_idx,)
+                out[key] = cache[key].at[idx].set(cache1[key], mode="drop")
+            out["lens"] = cache["lens"].at[slot_idx].set(
+                cache1["lens"], mode="drop")
+            return out
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+        self._splice = jax.jit(_splice)
+        self.reset()
+
+    # ------------------------------------------------------------ lifecycle
+    def reset(self) -> None:
+        """Fresh slot state (cache arrays are reallocated; the jitted
+        executables persist, so a warmed engine stays warm)."""
+        cfg = self.cfg
+        self.cache = self.bundle.make_slot_cache(cfg.slots, cfg.cache_len)
+        self.active: List[Optional[ServeRequest]] = [None] * cfg.slots
+        self.last_tok = np.zeros((cfg.slots,), np.int32)
+        self.waiting: List[ServeRequest] = []   # arrived, not yet admitted
+        self.finished: List[ServeRequest] = []
+        self.decode_steps = 0
+        self.prefill_calls = 0
+
+    def submit(self, req: ServeRequest) -> None:
+        if len(req.prompt) > self.cfg.cache_len:
+            raise ValueError(f"request {req.rid}: prompt length "
+                             f"{len(req.prompt)} exceeds cache_len "
+                             f"{self.cfg.cache_len}")
+        self.waiting.append(req)
+
+    # ------------------------------------------------------------ admission
+    def _admit(self, now: float) -> bool:
+        """Fill free slots from the waiting queue (FCFS), one bucketed
+        prefill dispatch per padded prompt length.  Returns True if any
+        request was admitted."""
+        free = [s for s, r in enumerate(self.active) if r is None]
+        if not free or not self.waiting:
+            return False
+        take = min(len(free), len(self.waiting))
+        reqs = self.waiting[:take]
+        del self.waiting[:take]
+        slots = free[:take]
+        buckets = build_buckets([r.prompt for r in reqs], slots,
+                                self.cfg.slots, pad_to=self.cfg.pad_to,
+                                max_batch=self.cfg.max_prefill_batch)
+        for b in buckets:
+            logits, cache1 = self._prefill(self.params,
+                                           jnp.asarray(b.tokens),
+                                           jnp.asarray(b.lens))
+            self.cache = self._splice(self.cache, cache1,
+                                      jnp.asarray(b.slot_idx))
+            self.prefill_calls += 1
+            first = np.asarray(jnp.argmax(logits, axis=-1))
+            for row, i in enumerate(b.rows):
+                req, slot = reqs[i], slots[i]
+                req.out.append(int(first[row]))
+                req.t_admit = now
+                req.t_first = now
+                self.active[slot] = req
+                self.last_tok[slot] = first[row]
+                self._maybe_finish(slot, now)
+        return True
+
+    def _maybe_finish(self, slot: int, now: float) -> None:
+        req = self.active[slot]
+        seq_len = len(req.prompt) + len(req.out)
+        if len(req.out) >= req.max_new or seq_len >= self.cfg.cache_len:
+            req.done = True
+            req.t_done = now
+            self.finished.append(req)
+            self.active[slot] = None
+
+    # --------------------------------------------------------------- decode
+    def step(self, now: float) -> int:
+        """One jitted decode step over every slot.  Returns the number of
+        live tokens produced."""
+        active_mask = np.array([r is not None for r in self.active])
+        if not active_mask.any():
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            jnp.asarray(self.last_tok[:, None]), jnp.asarray(active_mask))
+        self.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        produced = 0
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(nxt[s]))
+            self.last_tok[s] = nxt[s]
+            produced += 1
+            self._maybe_finish(s, now)
+        return produced
+
+    # ------------------------------------------------------------------ run
+    def run(self, requests: Sequence[ServeRequest], *,
+            realtime: bool = False,
+            log: Optional[Callable[[str], None]] = None
+            ) -> List[ServeRequest]:
+        """Serve a workload to completion.
+
+        ``realtime=True`` honours each request's ``arrival_s`` against the
+        wall clock (open-loop load; the loop sleeps when idle before the
+        next arrival).  ``realtime=False`` runs on a virtual clock that
+        ticks once per decode step — ``arrival_s`` is then "arrives after
+        N decode steps", which makes mid-flight admission deterministic
+        for tests.
+        """
+        self.reset()
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        t0 = time.monotonic()
+        clock = (lambda: time.monotonic() - t0) if realtime else None
+        vnow = 0.0
+
+        while pending or self.waiting or any(self.active):
+            now = clock() if realtime else vnow
+            while pending and pending[0].arrival_s <= now:
+                req = pending.pop(0)
+                req.t_arrival = req.arrival_s
+                self.submit(req)
+            if not realtime and not self.waiting and not any(self.active) \
+                    and pending:
+                vnow = pending[0].arrival_s  # idle jump to the next arrival
+                continue
+            admitted = self._admit(now)
+            produced = self.step(clock() if realtime else vnow)
+            if not realtime:
+                vnow += 1.0
+            if produced == 0 and not admitted:
+                if realtime and pending and not self.waiting \
+                        and not any(self.active):
+                    # idle gap in the open-loop schedule
+                    gap = pending[0].arrival_s - (time.monotonic() - t0)
+                    if gap > 0:
+                        time.sleep(min(gap, 0.05))
+            if log and admitted:
+                log(f"[serve] t={now:7.3f}s active="
+                    f"{sum(r is not None for r in self.active)} "
+                    f"waiting={len(self.waiting)} pending={len(pending)} "
+                    f"finished={len(self.finished)}")
+        return sorted(self.finished, key=lambda r: r.rid)
+
+
+# ---------------------------------------------------------------------------
+# Scalar reference
+# ---------------------------------------------------------------------------
+
+
+def greedy_reference(bundle, params, prompt: np.ndarray, max_new: int,
+                     cache_len: int,
+                     decode_jit: Optional[Callable] = None) -> List[int]:
+    """One-request greedy decode through the *scalar* serving path
+    (``bundle.prefill`` + ``bundle.decode_step`` with the shared scalar
+    cache length) — the bit-parity oracle for the engine."""
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    logits, cache = bundle.prefill(params,
+                                   {"tokens": toks, "cache_len": cache_len})
+    out = [int(jnp.argmax(logits[0]))]
+    dec = decode_jit or jax.jit(bundle.decode_step)
+    while len(out) < max_new and len(prompt) + len(out) < cache_len:
+        logits, cache = dec(params, cache,
+                            {"tokens": jnp.asarray([[out[-1]]], jnp.int32)})
+        out.append(int(jnp.argmax(logits[0])))
+    return out

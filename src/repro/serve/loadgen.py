@@ -1,0 +1,64 @@
+"""Open-loop load generation + latency accounting (DESIGN.md §12).
+
+Open loop means arrivals follow their own clock (a Poisson process) and do
+NOT wait for the server — the honest way to measure a serving system,
+because a slow server accumulates queueing delay into the reported
+latencies instead of silently throttling the load (closed-loop
+coordinated omission).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.engine import ServeRequest
+
+
+def poisson_workload(
+    n_requests: int,
+    *,
+    vocab_size: int,
+    rate_per_s: float,
+    prompt_lens: Sequence[int] = (4, 8, 12, 16, 24),
+    out_lens: Sequence[int] = (4, 8, 12, 16, 24),
+    seed: int = 0,
+) -> List[ServeRequest]:
+    """Mixed prompt/output-length requests with Poisson (exponential
+    inter-arrival) timestamps.  ``rate_per_s=0`` degenerates to a burst
+    (every request arrives at t=0) — the pure-throughput workload."""
+    rng = np.random.default_rng(seed)
+    if rate_per_s > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / rate_per_s, n_requests))
+    else:
+        arrivals = np.zeros(n_requests)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.choice(prompt_lens))
+        reqs.append(ServeRequest(
+            rid=i,
+            prompt=rng.integers(0, vocab_size, plen).astype(np.int32),
+            max_new=int(rng.choice(out_lens)),
+            arrival_s=float(arrivals[i]),
+        ))
+    return reqs
+
+
+def latency_stats(finished: Sequence[ServeRequest],
+                  makespan_s: Optional[float] = None) -> Dict[str, float]:
+    """p50/p99 end-to-end latency + time-to-first-token and throughput."""
+    lat = np.array([r.latency_s for r in finished])
+    ttft = np.array([r.ttft_s for r in finished])
+    tokens = int(sum(len(r.out) for r in finished))
+    span = makespan_s if makespan_s is not None else (
+        max(r.t_done for r in finished) if len(finished) else 0.0)
+    return {
+        "requests": float(len(finished)),
+        "tokens": float(tokens),
+        "tok_per_s": tokens / span if span > 0 else 0.0,
+        "p50_latency_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+        "p99_latency_s": float(np.percentile(lat, 99)) if len(lat) else 0.0,
+        "p50_ttft_s": float(np.percentile(ttft, 50)) if len(ttft) else 0.0,
+        "p99_ttft_s": float(np.percentile(ttft, 99)) if len(ttft) else 0.0,
+        "makespan_s": float(span),
+    }

@@ -1,0 +1,160 @@
+"""Genome front-end: search winner → deployable server (DESIGN.md §12).
+
+Closes HALF's loop (search → implement → deploy): pick the best feasible
+candidate for a design goal (`select_for_goal`), train it to convergence,
+compile the deployment artifact (BN-folded + quantized params, unrolling
+plan, accumulator formats — core/compile_model.py), and serve batched
+classification requests through one jitted deployment-mode forward.
+
+The ECG winners are single-forward classifiers, so "serving" is the
+prefill-only degenerate case of the engine: admission buckets by batch
+size (the input length is fixed by the genome's decimation gene), no
+decode loop, no cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compile_model import CompiledModel, compile_candidate
+from repro.core.genome import Genome, describe
+from repro.core.objective_schema import DesignGoal
+from repro.core.search_space import DEFAULT_SPACE, SearchSpace
+from repro.core.trainer import prep_inputs, train_candidate
+from repro.serve.buckets import pad_batch
+
+
+@dataclasses.dataclass
+class ServableWinner:
+    """A compiled search winner plus its jitted deployment forward."""
+
+    genome: Genome
+    compiled: CompiledModel
+    goal: Optional[str]
+    input_length: int
+    train_meta: Dict[str, float]
+    _predict: Any = None           # jitted (B, L, 2) -> (B, n_classes)
+    batches_served: int = 0
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        """Deployment-mode logits for a batch of windows ``(B, L, 2)``.
+
+        Inputs at the dataset's max resolution are decimated to the
+        genome's input length; the batch is padded to a power of two so
+        repeated serving hits a handful of compiled executables."""
+        x = prep_inputs(np.asarray(x), self.input_length)
+        b = x.shape[0]
+        bp = pad_batch(b, max(b, 1))
+        if bp != b:
+            x = np.concatenate([x, np.zeros((bp - b,) + x.shape[1:],
+                                            x.dtype)])
+        logits = self._predict(jnp.asarray(x))
+        self.batches_served += 1
+        return np.asarray(logits[:b])
+
+    def classify(self, x: np.ndarray) -> np.ndarray:
+        return self.predict(x).argmax(axis=1)
+
+    def report(self) -> str:
+        lines = [f"goal={self.goal} input_length={self.input_length} "
+                 f"det={self.train_meta['detection_rate']:.3f} "
+                 f"fa={self.train_meta['false_alarm_rate']:.3f}"]
+        lines.append(self.compiled.report())
+        return "\n".join(lines)
+
+
+def compile_winner(
+    genome: Genome,
+    data_train: Tuple[np.ndarray, np.ndarray],
+    data_val: Tuple[np.ndarray, np.ndarray],
+    *,
+    space: SearchSpace = DEFAULT_SPACE,
+    goal: Optional[str] = None,
+    train_steps: int = 300,
+    train_batch: int = 64,
+    seed: int = 0,
+) -> ServableWinner:
+    """Train + compile one genome into a :class:`ServableWinner`."""
+    from repro.core.trainer import (evaluate, forward, init_candidate,
+                                    presample_indices, refresh_bn_stats)
+    from repro.optim import adamw
+    from repro.core.trainer import make_train_step_indexed
+
+    specs = genome.phenotype(space)
+    quant = genome.quant(space)
+    want_len = genome.input_length(space)
+    x_tr = prep_inputs(data_train[0], want_len)
+
+    rng = jax.random.PRNGKey(seed)
+    params = init_candidate(rng, specs)
+    opt = adamw(3e-3, b1=0.9, b2=0.99, weight_decay=1e-4)
+    opt_state = opt.init(params)
+    step_fn = make_train_step_indexed(specs, quant, opt)
+    idx, calib_idx = presample_indices(seed, len(x_tr), train_steps,
+                                       train_batch)
+    x_dev, y_dev = jnp.asarray(x_tr), jnp.asarray(data_train[1])
+    idx_dev = jnp.asarray(idx)
+    for s in range(train_steps):
+        params, opt_state, _ = step_fn(params, opt_state, x_dev, y_dev,
+                                       idx_dev[s])
+    params = refresh_bn_stats(params, specs, x_dev[jnp.asarray(calib_idx)],
+                              quant)
+    x_va = prep_inputs(data_val[0], want_len)
+    det, fa, nll = evaluate(params, specs, quant, x_va, data_val[1])
+
+    compiled = compile_candidate(genome, params, x_dev[jnp.asarray(calib_idx)],
+                                 space=space)
+
+    # one compiled deployment-mode executable (params are baked in as
+    # constants — BN-folded and fake-quantized by compile_candidate)
+    predict = jax.jit(lambda x: forward(compiled.params, specs, x,
+                                        quant=None, train=False))
+    return ServableWinner(
+        genome=genome,
+        compiled=compiled,
+        goal=goal,
+        input_length=want_len,
+        train_meta={"detection_rate": det, "false_alarm_rate": fa,
+                    "val_loss": nll, "steps": float(train_steps)},
+        _predict=predict,
+    )
+
+
+def serve_winner(
+    search,                         # EvolutionarySearch
+    state,                          # NASState
+    goal: Union[None, str, DesignGoal] = None,
+    *,
+    data_train: Tuple[np.ndarray, np.ndarray],
+    data_val: Tuple[np.ndarray, np.ndarray],
+    train_steps: int = 300,
+    train_batch: int = 64,
+    seed: int = 0,
+    log=print,
+) -> ServableWinner:
+    """search → implement → deploy: pick the goal's best feasible
+    candidate, train + compile it, return a serving handle.
+
+    Raises ``LookupError`` when no candidate meets the goal's constraints
+    (serve nothing rather than an infeasible model)."""
+    cand = search.select_for_goal(state, goal)
+    if cand is None:
+        raise LookupError(f"no feasible candidate for goal {goal!r} — "
+                          f"run more generations")
+    goal_name = goal if isinstance(goal, (str, type(None))) else goal.name
+    log(f"[serve] winner for goal={goal_name}: "
+        f"{describe(cand.genome, search.space)}")
+    t0 = time.time()
+    winner = compile_winner(cand.genome, data_train, data_val,
+                            space=search.space, goal=goal_name,
+                            train_steps=train_steps,
+                            train_batch=train_batch, seed=seed)
+    log(f"[serve] trained+compiled in {time.time()-t0:.1f}s "
+        f"(det={winner.train_meta['detection_rate']:.3f} "
+        f"fa={winner.train_meta['false_alarm_rate']:.3f})")
+    return winner

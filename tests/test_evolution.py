@@ -221,3 +221,48 @@ def test_async_pipeline_rejects_checkpoint_resume(tmp_path):
     s = pipeline_search("async")
     with pytest.raises(ValueError, match="async"):
         s.run_resumable(str(tmp_path / "ckpt.json"))
+
+
+def test_device_imbalance_helper():
+    from repro.core.evolution import device_imbalance
+    # meaningless cases: <2 devices, or a generation with ~no device work
+    assert device_imbalance({}) is None
+    assert device_imbalance({"cpu:0": 5.0}) is None
+    assert device_imbalance({"cpu:0": 0.0, "cpu:1": 0.0}) is None
+    # balanced vs skewed
+    assert abs(device_imbalance({"cpu:0": 1.0, "cpu:1": 1.1}) - 1.1) < 1e-9
+    assert abs(device_imbalance({"cpu:0": 1.0, "cpu:1": 4.0,
+                                 "cpu:2": 2.0}) - 4.0) < 1e-9
+    # one device idle while others trained: worst possible skew
+    assert device_imbalance({"cpu:0": 0.0, "cpu:1": 3.0}) == float("inf")
+
+
+def test_device_imbalance_warning_logged():
+    """A skewed generation surfaces a scheduler warning and records the
+    ratio in the history (device-affine sharding can pin the big signature
+    buckets to one device — the log line is the operator's signal)."""
+    from repro.core.evolution import DEVICE_IMBALANCE_RATIO
+
+    def run_with_busy(busy):
+        lines = []
+        cfg = NASConfig(generations=1, children_per_gen=6, n_accept=2,
+                        init_population=6, n_workers=2, seed=0)
+        s = EvolutionarySearch(cfg, None, None, train_fn=mock_trainer([]),
+                               log=lambda *a: lines.append(
+                                   " ".join(str(x) for x in a)))
+        state = s.init_state()
+        orig = s._finish_training
+        # train for real, but report the synthetic per-device busy split
+        s._finish_training = lambda *a, **k: (orig(*a, **k), busy)[1]
+        state = s.step(state)
+        return lines, state
+
+    lines, state = run_with_busy({"cpu:0": 0.1, "cpu:1": 1.0})
+    assert any("WARNING" in ln and "imbalance 10.0x" in ln for ln in lines)
+    rec = state.history[-1]
+    assert abs(rec["device_imbalance"] - 10.0) < 1e-6
+    assert rec["device_imbalance"] > DEVICE_IMBALANCE_RATIO
+
+    lines, state = run_with_busy({"cpu:0": 1.0, "cpu:1": 1.1})
+    assert not any("imbalance" in ln for ln in lines)
+    assert "device_imbalance" not in state.history[-1]

@@ -1,0 +1,307 @@
+"""Continuous-batching serving engine (repro.serve) — DESIGN.md §12.
+
+The load-bearing property is *bit-identical greedy parity*: every request
+served through the slotted engine (bucketed prefill, mixed lengths in
+flight, slot reuse) must produce exactly the tokens a scalar one-request
+decode produces.  Everything else — admission, buckets, stats — is tested
+around that invariant.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models.registry import build_model
+from repro.serve import (
+    EngineConfig,
+    ServeEngine,
+    ServeRequest,
+    build_buckets,
+    greedy_reference,
+    latency_stats,
+    poisson_workload,
+)
+from repro.serve.buckets import pad_batch, pad_length
+
+CACHE_LEN = 48
+
+
+def _bundle(arch):
+    cfg = reduced_config(arch)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+def _requests(cfg, lens_out, seed=0):
+    """Mixed (prompt_len, max_new) pairs as a burst workload."""
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(rid=i,
+                         prompt=rng.integers(0, cfg.vocab_size, pl).astype(
+                             np.int32),
+                         max_new=mn)
+            for i, (pl, mn) in enumerate(lens_out)]
+
+
+def _refs(bundle, params, reqs):
+    dec = jax.jit(bundle.decode_step)
+    return {r.rid: greedy_reference(bundle, params, r.prompt, r.max_new,
+                                    CACHE_LEN, decode_jit=dec)
+            for r in reqs}
+
+
+# ---------------------------------------------------------------- buckets
+
+
+def test_pad_helpers():
+    assert [pad_length(n, 8) for n in (1, 8, 9, 24)] == [8, 8, 16, 24]
+    assert [pad_length(n, 1) for n in (1, 7)] == [1, 7]
+    assert [pad_batch(n, 8) for n in (1, 2, 3, 5, 8, 11)] == \
+        [1, 2, 4, 8, 8, 8]
+
+
+def test_build_buckets_groups_and_pads():
+    prompts = [np.arange(n, dtype=np.int32) for n in (3, 5, 9, 11, 20)]
+    buckets = build_buckets(prompts, slots=[0, 1, 2, 3, 4], n_slots=8,
+                            pad_to=8, max_batch=4)
+    # padded lengths: 8,8,16,16,24 -> three buckets
+    by_len = {b.tokens.shape[1]: b for b in buckets}
+    assert set(by_len) == {8, 16, 24}
+    assert list(by_len[8].lens) == [3, 5]
+    # batch rows are padded to powers of two; pad rows scatter out of range
+    assert by_len[8].tokens.shape[0] == 2
+    b16 = by_len[16]
+    assert b16.tokens.shape[0] == 2 and list(b16.slot_idx) == [2, 3]
+    # right padding is zeros beyond each row's length
+    assert not by_len[8].tokens[0, 3:].any()
+
+
+def test_build_buckets_chunks_to_max_batch():
+    prompts = [np.arange(4, dtype=np.int32)] * 10
+    buckets = build_buckets(prompts, slots=list(range(10)), n_slots=16,
+                            pad_to=4, max_batch=4)
+    assert [len(b.rows) for b in buckets] == [4, 4, 2]
+    # every original row appears exactly once across chunks
+    assert sorted(i for b in buckets for i in b.rows) == list(range(10))
+
+
+# ------------------------------------------------------- engine bit-parity
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "zamba2-7b"])
+def test_engine_greedy_parity(arch):
+    """Burst workload with mixed prompt/output lengths: every request's
+    greedy tokens are bit-identical to the scalar one-request reference."""
+    cfg, bundle, params = _bundle(arch)
+    reqs = _requests(cfg, [(4, 6), (11, 3), (7, 9), (16, 5), (5, 5),
+                           (9, 8), (13, 4), (6, 7), (20, 3), (8, 6)])
+    refs = _refs(bundle, params, reqs)
+    pad_to = 8 if bundle.prefill_pads else 1
+    engine = ServeEngine(bundle, params, EngineConfig(
+        slots=4, cache_len=CACHE_LEN, pad_to=pad_to, max_prefill_batch=4))
+    done = engine.run(reqs)
+    assert len(done) == len(reqs)
+    for r in done:
+        assert r.out == refs[r.rid], f"req {r.rid} diverged"
+    # 10 requests through 4 slots exercises slot reuse
+    assert engine.prefill_calls >= 3
+
+
+def test_engine_per_slot_length_independence():
+    """Slots at wildly different sequence positions decode together —
+    the fix for the shared ``cache['len']`` scalar."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _requests(cfg, [(3, 20), (30, 2), (12, 10), (25, 16)])
+    refs = _refs(bundle, params, reqs)
+    engine = ServeEngine(bundle, params, EngineConfig(
+        slots=4, cache_len=CACHE_LEN, pad_to=1))
+    done = engine.run(reqs)
+    for r in done:
+        assert r.out == refs[r.rid]
+    # the longest-running request kept decoding after the others finished
+    assert engine.decode_steps >= 19
+
+
+def test_engine_mid_flight_admission():
+    """Virtual-clock arrivals land while earlier requests are mid-decode:
+    no wave barrier, and parity still holds."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _requests(cfg, [(6, 12), (9, 12), (7, 10), (5, 8), (11, 6)])
+    refs = _refs(bundle, params, reqs)
+    # slots=2: rids 0,1 admitted at t=0; the rest arrive mid-decode
+    for r, arr in zip(reqs, [0.0, 0.0, 3.0, 4.0, 5.0]):
+        r.arrival_s = arr
+    engine = ServeEngine(bundle, params, EngineConfig(
+        slots=2, cache_len=CACHE_LEN, pad_to=1))
+    done = engine.run(reqs)
+    for r in done:
+        assert r.out == refs[r.rid]
+    admits = sorted(r.t_admit for r in done)
+    assert admits[0] == 0.0
+    # at least one admission happened strictly mid-run (after decode began)
+    assert admits[-1] > 0.0
+
+
+def test_engine_slot_reuse_many_requests():
+    """3x more requests than slots: every slot is recycled, FCFS order."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _requests(cfg, [((i % 5) + 4, (i % 3) + 2) for i in range(12)])
+    refs = _refs(bundle, params, reqs)
+    engine = ServeEngine(bundle, params, EngineConfig(
+        slots=4, cache_len=CACHE_LEN, pad_to=8, max_prefill_batch=4))
+    done = engine.run(reqs)
+    assert [r.rid for r in done] == list(range(12))
+    for r in done:
+        assert r.out == refs[r.rid]
+    # earlier arrivals are admitted no later than later ones (FCFS)
+    admits = [r.t_admit for r in sorted(done, key=lambda r: r.rid)]
+    assert all(a <= b for a, b in zip(admits, admits[1:]))
+
+
+def test_engine_padded_prefill_matches_exact():
+    """pad_to=8 bucketed prefill must not change a single token vs
+    exact-length prefill (right-padding contributes exact zeros)."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _requests(cfg, [(5, 6), (9, 6), (13, 6), (3, 6)])
+    exact = ServeEngine(bundle, params, EngineConfig(
+        slots=4, cache_len=CACHE_LEN, pad_to=1))
+    padded = ServeEngine(bundle, params, EngineConfig(
+        slots=4, cache_len=CACHE_LEN, pad_to=8))
+    out_e = {r.rid: r.out for r in exact.run(
+        [ServeRequest(r.rid, r.prompt, r.max_new) for r in reqs])}
+    out_p = {r.rid: r.out for r in padded.run(
+        [ServeRequest(r.rid, r.prompt, r.max_new) for r in reqs])}
+    assert out_e == out_p
+    # padding actually batched prompts into fewer dispatches
+    assert padded.prefill_calls <= exact.prefill_calls
+
+
+def test_engine_truncates_at_cache_capacity():
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    req = ServeRequest(rid=0, prompt=np.arange(CACHE_LEN - 3,
+                                               dtype=np.int32) % 64,
+                       max_new=50)
+    engine = ServeEngine(bundle, params, EngineConfig(
+        slots=1, cache_len=CACHE_LEN, pad_to=1))
+    done = engine.run([req])
+    # prompt(45) + out hits cache_len, not the 50-token budget
+    assert len(done[0].out) == 3
+
+
+def test_engine_rejects_unservable_family_and_prompts():
+    cfg, bundle, params = _bundle("whisper-tiny")        # encdec
+    with pytest.raises(ValueError, match="no slotted serving path"):
+        ServeEngine(bundle, params, EngineConfig(slots=2,
+                                                 cache_len=CACHE_LEN))
+    cfg, bundle, params = _bundle("mamba2-780m")         # pure SSM
+    with pytest.raises(ValueError, match="pad_to=1"):
+        ServeEngine(bundle, params, EngineConfig(slots=2, pad_to=8,
+                                                 cache_len=CACHE_LEN))
+    engine = ServeEngine(bundle, params, EngineConfig(
+        slots=2, pad_to=1, cache_len=CACHE_LEN))
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        engine.submit(ServeRequest(
+            rid=0, prompt=np.zeros(CACHE_LEN + 1, np.int32), max_new=1))
+
+
+# ---------------------------------------------- wave baseline (regression)
+
+
+def test_batched_server_mixed_lengths_regression():
+    """The old BatchedServer shared one scalar ``cache['len']`` across
+    slots, so a wave mixing prompt lengths decoded from wrong positions.
+    The slotted rewrite must match the scalar reference bit for bit."""
+    from repro.launch.serve import BatchedServer
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _requests(cfg, [(4, 8), (17, 8), (9, 8), (26, 8)])  # one wave
+    refs = _refs(bundle, params, reqs)
+    server = BatchedServer(bundle, params, slots=4, cache_len=CACHE_LEN)
+    done = server.run(reqs, log=lambda *_: None)
+    assert len(done) == 4
+    for r in done:
+        assert r.out == refs[r.rid], f"req {r.rid} diverged (stale cache)"
+
+
+def test_batched_server_hybrid_family():
+    from repro.launch.serve import BatchedServer
+    cfg, bundle, params = _bundle("zamba2-7b")
+    reqs = _requests(cfg, [(6, 4), (12, 4)])
+    refs = _refs(bundle, params, reqs)
+    server = BatchedServer(bundle, params, slots=2, cache_len=CACHE_LEN)
+    done = server.run(reqs, log=lambda *_: None)
+    for r in done:
+        assert r.out == refs[r.rid]
+
+
+# -------------------------------------------------------------- load gen
+
+
+def test_poisson_workload_deterministic():
+    a = poisson_workload(8, vocab_size=64, rate_per_s=10.0, seed=3)
+    b = poisson_workload(8, vocab_size=64, rate_per_s=10.0, seed=3)
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    arr = [r.arrival_s for r in a]
+    assert arr == sorted(arr) and arr[-1] > 0
+    burst = poisson_workload(4, vocab_size=64, rate_per_s=0.0)
+    assert all(r.arrival_s == 0.0 for r in burst)
+
+
+def test_latency_stats():
+    reqs = []
+    for i in range(4):
+        r = ServeRequest(rid=i, prompt=np.zeros(4, np.int32), max_new=2,
+                         arrival_s=float(i))
+        r.t_arrival, r.t_first, r.t_done = float(i), i + 0.5, i + 1.0
+        r.out = [1, 2]
+        reqs.append(r)
+    s = latency_stats(reqs, makespan_s=4.0)
+    assert s["requests"] == 4 and s["tokens"] == 8
+    assert s["tok_per_s"] == pytest.approx(2.0)
+    assert s["p50_latency_s"] == pytest.approx(1.0)
+    assert s["p50_ttft_s"] == pytest.approx(0.5)
+
+
+# --------------------------------------------------------- winner serving
+
+
+@pytest.mark.slow
+def test_serve_winner_end_to_end(tiny_ecg):
+    """search → select_for_goal → train+compile → serve: the closed loop."""
+    from repro.core.evolution import EvolutionarySearch, NASConfig
+    from repro.serve import serve_winner
+    (tr, va) = tiny_ecg
+    cfg = NASConfig(generations=1, children_per_gen=3, n_accept=2,
+                    init_population=3, train_steps=60, train_batch=32,
+                    n_workers=2, seed=0, det_min=0.5, fa_max=0.5)
+    search = EvolutionarySearch(cfg, tr, va, log=lambda *_: None)
+    state = search.run()
+    winner = serve_winner(search, state, "low_energy",
+                          data_train=tr, data_val=va,
+                          train_steps=60, train_batch=32,
+                          log=lambda *_: None)
+    x_va = va[0][:10]
+    logits = winner.predict(x_va)
+    assert logits.shape == (10, 2)
+    assert np.isfinite(logits).all()
+    preds = winner.classify(x_va)
+    assert set(np.unique(preds)) <= {0, 1}
+    assert winner.batches_served == 2
+    assert "goal=low_energy" in winner.report()
+
+
+def test_serve_winner_raises_without_feasible(tiny_ecg):
+    from repro.core.evolution import EvolutionarySearch, NASConfig
+    from repro.core.objective_schema import Constraints, DesignGoal
+    from repro.serve import serve_winner
+    (tr, va) = tiny_ecg
+    cfg = NASConfig(generations=0, children_per_gen=2, n_accept=1,
+                    init_population=2, train_steps=5, train_batch=16,
+                    n_workers=1, seed=0)
+    search = EvolutionarySearch(cfg, tr, va, log=lambda *_: None)
+    state = search.run()
+    impossible = DesignGoal(name="impossible",
+                            constraints=Constraints(det_min=1.01))
+    with pytest.raises(LookupError, match="no feasible candidate"):
+        serve_winner(search, state, impossible, data_train=tr, data_val=va)
