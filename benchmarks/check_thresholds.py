@@ -26,6 +26,18 @@ Gates BENCH_serve.json (benchmarks/serve_bench.py):
   shows ~3x; the generous ceiling only catches pathological queueing
   (e.g. the engine degenerating to serial admission).
 
+Gates BENCH_faults.json (benchmarks/fault_bench.py):
+
+* ``parity_ok`` must be true — the search that crashed every 3rd training
+  job and recovered produced the fault-free run's final population bit
+  for bit (recovery restores work, never changes it);
+* ``slowdown_faulted <= --max-fault-slowdown`` (default 5.0): wall-time
+  ratio of the crashed-and-recovered run to the fault-free run.  The
+  bench shows ~3x with its deliberately tiny simulated buckets (retry
+  backoff dominates there; with real multi-second training it is noise) —
+  the ceiling catches recovery degenerating into retry storms or
+  serialized backoff.
+
 Exit code 1 on any violation, so the build fails.
 """
 from __future__ import annotations
@@ -91,6 +103,33 @@ def check_serve(path: str, min_speedup: float,
     return failures
 
 
+def check_faults(path: str, max_slowdown: float) -> list:
+    with open(path) as f:
+        payload = json.load(f)
+    summary = payload.get("summary")
+    if not summary:
+        return [f"{path}: no gate summary (fault_bench.py --json writes it)"]
+    failures = []
+    if not summary.get("parity_ok", False):
+        failures.append(
+            f"{path}: parity_ok={summary.get('parity_ok')} — the "
+            f"crashed-and-recovered search diverged from the fault-free "
+            f"trajectory")
+    slowdown = summary.get("slowdown_faulted", float("inf"))
+    if slowdown > max_slowdown:
+        failures.append(
+            f"{path}: slowdown_faulted={slowdown:.2f}x > ceiling "
+            f"{max_slowdown:.2f}x — fault recovery is pathologically "
+            f"expensive (retry storm / serialized backoff)")
+    print(f"[gate] {path}: parity_ok={summary.get('parity_ok')} "
+          f"slowdown_faulted={slowdown:.2f}x "
+          f"(ceiling {max_slowdown:.2f}x) "
+          f"crashes={summary.get('crashes')} "
+          f"recovery={summary.get('recovery_ms_per_crash', 0.0):.0f}"
+          f"ms/crash")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("pipeline_json", nargs="?",
@@ -100,6 +139,9 @@ def main() -> None:
     ap.add_argument("--serve-json", default=None,
                     help="serve bench result (e.g. BENCH_serve.json); "
                          "omit to skip the serving gate")
+    ap.add_argument("--faults-json", default=None,
+                    help="fault-recovery bench result (e.g. "
+                         "BENCH_faults.json); omit to skip the fault gate")
     ap.add_argument("--min-speedup", type=float, default=1.2,
                     help="async overlap speedup floor (default 1.2)")
     ap.add_argument("--min-serve-speedup", type=float, default=3.0,
@@ -108,11 +150,17 @@ def main() -> None:
     ap.add_argument("--max-p99-slowdown", type=float, default=20.0,
                     help="p99 Poisson latency ceiling as a multiple of "
                          "the unloaded scalar latency (default 20.0)")
+    ap.add_argument("--max-fault-slowdown", type=float, default=5.0,
+                    help="wall-time ceiling of the crash-and-recover run "
+                         "as a multiple of the fault-free run "
+                         "(default 5.0)")
     args = ap.parse_args()
     failures = check_pipeline(args.pipeline_json, args.min_speedup)
     if args.serve_json:
         failures += check_serve(args.serve_json, args.min_serve_speedup,
                                 args.max_p99_slowdown)
+    if args.faults_json:
+        failures += check_faults(args.faults_json, args.max_fault_slowdown)
     for f in failures:
         print(f"[gate] FAIL: {f}", file=sys.stderr)
     if failures:

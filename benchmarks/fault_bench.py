@@ -1,0 +1,145 @@
+"""Fault-recovery overhead: the same search with and without injected
+worker crashes (DESIGN.md §13).
+
+Every 3rd training job's first attempt crashes (the canonical
+crash-and-recover drill, :func:`repro.core.faults.crash_every`); the
+scheduler retries it with exponential backoff.  The bench measures what
+that recovery *costs*:
+
+1. runs a fixed-seed search fault-free, then identically seeded with the
+   crash plan wired in, and reports the wall-time ratio (``slowdown``);
+2. **parity-gates**: both runs must produce bit-identical final
+   populations — recovery restores the work, never changes it.  A parity
+   failure exits non-zero; the slowdown ceiling is enforced by
+   ``benchmarks/check_thresholds.py --faults-json`` (relative gate: a
+   ratio against the same-machine fault-free run, never a wall time).
+
+Device time is simulated (each signature-bucket job sleeps a fixed
+interval, releasing the GIL like a real XLA dispatch) so the measured
+overhead is the recovery machinery itself — retried bucket time plus
+backoff — not compute noise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.evolution import EvolutionarySearch, NASConfig
+from repro.core.faults import FaultPlan, crash_every
+from repro.core.trainer import TrainResult
+
+GENERATIONS = 6
+CRASH_EVERY = 3
+SLEEP_S = 0.015  # simulated device time per signature bucket
+
+
+def _sim_trainer(sleep_s: float):
+    def train(genomes, device=None):
+        if sleep_s > 0.0:
+            time.sleep(sleep_s)
+        out = []
+        for g in genomes:
+            det = min(0.99, 0.70 + 0.05 * g.depth())
+            out.append(TrainResult(
+                detection_rate=det,
+                false_alarm_rate=max(0.0, 0.30 - 0.04 * g.depth()),
+                val_loss=0.2, steps=0))
+        return out
+    return train
+
+
+def _run_search(faults: Optional[FaultPlan], smoke: bool
+                ) -> Tuple[object, float]:
+    cfg = NASConfig(generations=GENERATIONS,
+                    children_per_gen=16 if smoke else 48,
+                    n_accept=8 if smoke else 24,
+                    init_population=8, population_cap=64,
+                    n_workers=4, seed=11, pipeline="off")
+    s = EvolutionarySearch(cfg, None, None,
+                           batch_train_fn=_sim_trainer(SLEEP_S),
+                           log=lambda *_: None, faults=faults)
+    t0 = time.perf_counter()
+    state = s.run()
+    return state, time.perf_counter() - t0
+
+
+def run(log=print, smoke: bool = True) -> Tuple[List[Dict], Dict]:
+    # interleaved repeats, per-variant minimum wall: scheduler noise is
+    # additive, the trajectory is deterministic — the min is the cleanest
+    # estimate of each variant's true cost
+    states, walls, crashes = {}, {}, 0
+    for _ in range(3):
+        for name in ("fault_free", "faulted"):
+            plan = FaultPlan([crash_every(CRASH_EVERY)]) \
+                if name == "faulted" else None
+            state, wall = _run_search(plan, smoke)
+            states[name] = state
+            walls[name] = min(walls.get(name, np.inf), wall)
+            if plan is not None:
+                crashes = len(plan.fired(kind="crash"))
+
+    a, b = states["fault_free"], states["faulted"]
+    parity_ok = (list(a.pop.phash) == list(b.pop.phash)
+                 and np.array_equal(a.pop.cheap, b.pop.cheap)
+                 and np.array_equal(a.pop.expensive, b.pop.expensive))
+    if not parity_ok:
+        raise SystemExit("PARITY FAILURE: the crashed-and-recovered search "
+                         "diverged from the fault-free trajectory — "
+                         "recovery changed semantics")
+    slowdown = walls["faulted"] / walls["fault_free"]
+    overhead_ms = (walls["faulted"] - walls["fault_free"]) * 1e3 \
+        / max(crashes, 1)
+    log(f"[faults] fault_free {walls['fault_free'] * 1e3:.0f}ms, "
+        f"faulted {walls['faulted'] * 1e3:.0f}ms over {crashes} crashes "
+        f"-> slowdown {slowdown:.2f}x, ~{overhead_ms:.0f}ms/crash "
+        f"(parity OK)")
+
+    rows = [{
+        "name": f"faults_{name}",
+        "us_per_call": walls[name] / GENERATIONS * 1e6,
+        "derived": (f"slowdown={walls[name] / walls['fault_free']:.2f}x "
+                    f"crashes={crashes if name == 'faulted' else 0}"),
+    } for name in ("fault_free", "faulted")]
+    summary = {
+        "slowdown_faulted": round(slowdown, 3),
+        "parity_ok": True,      # the SystemExit above fired otherwise
+        "crashes": crashes,
+        "recovery_ms_per_crash": round(overhead_ms, 1),
+        "crash_every": CRASH_EVERY,
+        "generations": GENERATIONS,
+    }
+    return rows, summary
+
+
+def write_json(rows: List[Dict], summary: Optional[Dict],
+               path: str) -> None:
+    payload = {"bench": "faults", "rows": rows}
+    if summary is not None:
+        payload["summary"] = summary
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale generation width (default: smoke)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows + gate summary as JSON")
+    args = ap.parse_args()
+    log = lambda *a: print(*a, file=sys.stderr)  # noqa: E731
+    rows, summary = run(log=log, smoke=not args.full)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    if args.json:
+        write_json(rows, summary, args.json)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -51,6 +51,7 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import (
+        fault_bench,
         kernel_bench,
         multi_platform_bench,
         nas_loop_bench,
@@ -82,6 +83,13 @@ def main() -> None:
         train_bench.write_json(train_loop_rows, "BENCH_train_loop.json")
         print("# wrote BENCH_train_loop.json", file=sys.stderr)
     rows += _run_pipeline_bench(args)
+    fault_rows, fault_summary = fault_bench.run(
+        log=lambda *a: print(*a, file=sys.stderr), smoke=not args.full)
+    rows += fault_rows
+    if args.json:
+        fault_bench.write_json(fault_rows, fault_summary,
+                               "BENCH_faults.json")
+        print("# wrote BENCH_faults.json", file=sys.stderr)
     serve_rows, serve_summary = serve_bench.run(
         log=lambda *a: print(*a, file=sys.stderr), smoke=not args.full,
         n_requests=64 if args.full else 32)

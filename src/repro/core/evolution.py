@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.core import selection as sel
 from repro.core.cost_backend import BackendSpec, backend_schema, get_backend
+from repro.core.faults import FaultPlan
 from repro.core.genome import (
     Genome,
     PopulationEncoding,
@@ -154,6 +155,10 @@ class NASConfig:
     #   device is visible), False = force single-device dispatch
     lookahead: int = 1             # async mode: generations produced ahead
     #   of the oldest still-training one (max lookahead+1 in flight)
+    ckpt_every: Optional[int] = None  # run_resumable: generations between
+    #   checkpoints.  None = 1 for the deterministic pipelines, and
+    #   lookahead+1 for async (each checkpoint is a drain barrier: stop
+    #   admitting lookahead work, drain in flight, persist — DESIGN.md §13)
 
     @property
     def constraints(self) -> Constraints:
@@ -204,8 +209,13 @@ class EvolutionarySearch:
                  train_fn: Optional[Callable[[Genome], TrainResult]] = None,
                  batch_train_fn: Optional[
                      Callable[[List[Genome]], List[TrainResult]]] = None,
-                 log: Callable[[str], None] = print):
+                 log: Callable[[str], None] = print,
+                 faults: Optional[FaultPlan] = None):
         self.cfg = config
+        # fault injection (DESIGN.md §13): an explicit, seeded plan wired
+        # through the scheduler / training-result / checkpoint / generation
+        # inject points; None (production) leaves every hook inert
+        self.faults = faults
         if config.pipeline not in PIPELINE_MODES:
             raise ValueError(f"unknown pipeline mode {config.pipeline!r} "
                              f"(modes: {PIPELINE_MODES})")
@@ -280,10 +290,21 @@ class EvolutionarySearch:
             else max(config.n_workers, len(self.devices))
         self.scheduler = DynamicScheduler(n_workers=n_workers,
                                           max_retries=2, timeout_s=1800.0,
-                                          devices=self.devices)
+                                          devices=self.devices,
+                                          faults=faults,
+                                          seed=config.seed)
         # guards evaluated_hashes: the async pipeline's on_result hook
         # admits results from scheduler worker threads
         self._cache_lock = threading.Lock()
+
+    @staticmethod
+    def _poison_result(value):
+        """Injected-divergence payload: the result's loss goes non-finite
+        (the quarantine path then treats it exactly like a real NaN)."""
+        try:
+            return dataclasses.replace(value, val_loss=float("nan"))
+        except TypeError:
+            return value
 
     @staticmethod
     def _fn_takes_device(fn) -> bool:
@@ -455,8 +476,21 @@ class EvolutionarySearch:
                 except TypeError:
                     return
                 for k, j in enumerate(rows):
-                    admit(phashes[j], expensive_objectives(vals[k]))
-        return _TrainSubmission(run=self.scheduler.submit(jobs, on_result),
+                    exp = expensive_objectives(vals[k])
+                    vl = getattr(vals[k], "val_loss", 0.0)
+                    # never admit a diverged (non-finite) result early: the
+                    # blocking collect quarantines it with the pessimistic
+                    # row, and a poisoned cache entry would leak into later
+                    # generations' dormant-gene lookups
+                    if np.all(np.isfinite(exp)) and np.isfinite(vl):
+                        admit(phashes[j], exp)
+        # bucket sizes turn on the scheduler's largest-first dispatch, so
+        # device busy times stay level (the device_busy_s rebalancing
+        # signal, DESIGN.md §11/§13)
+        sizes = [len(rows) for rows in buckets] \
+            if buckets is not None else None
+        return _TrainSubmission(run=self.scheduler.submit(jobs, on_result,
+                                                          sizes=sizes),
                                 n_jobs=len(jobs), buckets=buckets,
                                 n_genomes=len(genomes))
 
@@ -491,12 +525,33 @@ class EvolutionarySearch:
                          plan: _TrainPlan, sub: _TrainSubmission
                          ) -> Dict[str, float]:
         """Wait on a submission, write expensive objectives (pessimistic on
-        failure) into ``pop`` + the dormant-gene cache, and return the
-        per-device busy time of the dispatched jobs."""
+        failure OR divergence) into ``pop`` + the dormant-gene cache, and
+        return the per-device busy time of the dispatched jobs."""
         results, raw = self._collect_training(sub)
+        if sub.run.quarantined:
+            self.log(f"[nas] WARNING: quarantined device(s) "
+                     f"{[str(d) for d in sub.run.quarantined]} after "
+                     f"repeated failures — queued buckets rebalanced onto "
+                     f"the surviving devices")
         for i, r in zip(plan.todo, results):
+            if self.faults is not None:
+                spec = self.faults.fire("trainer.result",
+                                        phash=str(pop.phash[i]),
+                                        generation=state.generation)
+                if spec is not None and spec.kind == "nonfinite" and r.ok:
+                    r = dataclasses.replace(
+                        r, value=self._poison_result(r.value))
             if r.ok:
                 exp = expensive_objectives(r.value)
+                vl = getattr(r.value, "val_loss", 0.0)
+                if not (np.all(np.isfinite(exp)) and np.isfinite(vl)):
+                    # per-candidate quarantine: a diverged candidate gets
+                    # the schema-pessimistic row; its bucket-mates' results
+                    # (already in `results`) are untouched
+                    self.log(f"[nas] candidate {pop.phash[i]} diverged "
+                             f"(non-finite objectives) — quarantined with "
+                             f"pessimistic row")
+                    exp = self._exp_worst.copy()
             else:  # failed after retries: pessimistic objectives, stay in
                 self.log(f"[nas] candidate {pop.phash[i]} failed: "
                          f"{r.error.splitlines()[-1] if r.error else '?'}")
@@ -545,13 +600,13 @@ class EvolutionarySearch:
         keep = environmental_selection(objs, self.cfg.population_cap,
                                        dom=dom)
         new_pop = merged.take(keep)
-        state.generation += 1
+        gen = state.generation + 1
         front = pareto_front(objs[keep], dom=dom[np.ix_(keep, keep)])
         feasible = new_pop.feasible_mask(self.constraints)
         primary = self.goal.primary_indices(self.schema)
         timings["select"] = time.monotonic() - t_sel
         rec = {
-            "generation": state.generation,
+            "generation": gen,
             "children": n_children,
             "trained": n_trained,
             "population": len(new_pop),
@@ -577,12 +632,15 @@ class EvolutionarySearch:
             rec["device_imbalance"] = imb
             busy_fmt = {k: round(v, 3)
                         for k, v in sorted(device_busy.items())}
-            self.log(f"[nas] WARNING gen {state.generation}: device busy "
+            self.log(f"[nas] WARNING gen {gen}: device busy "
                      f"imbalance {imb:.1f}x (max/min, threshold "
                      f"{DEVICE_IMBALANCE_RATIO:.1f}x) — signature buckets "
                      f"are skewing onto few devices; busy={busy_fmt}")
+        # publish the finished generation as one cut: everything above
+        # worked on locals, so a preemption mid-selection leaves `state` at
+        # the previous consistent generation (DESIGN.md §13)
+        state.pop, state.generation = new_pop, gen
         state.history.append(rec)
-        state.pop = new_pop
         self.log(f"[nas] gen {rec['generation']:3d} "
                  f"pop={rec['population']} front={rec['front_size']} "
                  f"feasible={rec['feasible']} "
@@ -667,11 +725,16 @@ class EvolutionarySearch:
             return self._run_async(gens)
         state = self.init_state()
         for _ in range(gens):
+            if self.faults is not None:
+                self.faults.fire("search.generation",
+                                 generation=state.generation)
             state = self.step(state)
         return state
 
     # --------------------------------------------------- async pipelining
-    def _run_async(self, generations: int) -> NASState:
+    def _run_async(self, generations: int,
+                   state: Optional[NASState] = None,
+                   ckpt_path: Optional[str] = None) -> NASState:
         """Steady-state pipelined evolution (``pipeline="async"``).
 
         Generation N+1's children are mutated, cheap-scored, preselected
@@ -684,10 +747,23 @@ class EvolutionarySearch:
         submission order.  Relaxed semantics: parents of generation N+1
         are sampled from the population *before* generation N's survivors
         joined it — the price of never letting the host or the devices
-        idle."""
-        state = self.init_state()
+        idle.
+
+        With ``ckpt_path`` the loop checkpoints at *drain barriers*
+        (DESIGN.md §13): every ``ckpt_every`` produced generations
+        (default ``lookahead + 1``) it stops admitting lookahead work,
+        drains every in-flight generation, and persists the then-consistent
+        :class:`NASState` — the pipeline refills afterwards.  A search
+        resumed from such a cut re-enters with an empty pipeline, exactly
+        the state an uninterrupted barrier run had at that point."""
+        if state is None:
+            state = self.init_state()
         target = state.generation + generations
         produced = state.generation
+        saved_gen = state.generation  # run_resumable persisted this cut
+        barrier = self.cfg.ckpt_every or (self.cfg.lookahead + 1)
+        next_barrier = (state.generation + barrier) \
+            if ckpt_path is not None else None
 
         def admit(phash: str, exp: np.ndarray) -> None:
             with self._cache_lock:
@@ -723,7 +799,14 @@ class EvolutionarySearch:
             t_drain = time.monotonic()
 
         while state.generation < target:
-            if produced < target and len(inflight) <= self.cfg.lookahead:
+            if self.faults is not None:
+                self.faults.fire("search.generation",
+                                 generation=state.generation)
+            can_produce = produced < target \
+                and len(inflight) <= self.cfg.lookahead
+            if next_barrier is not None and produced >= next_barrier:
+                can_produce = False  # drain barrier: admit nothing more
+            if can_produce:
                 t0 = time.monotonic()
                 timings: Dict[str, float] = {}
                 spawned = self._spawn_children(state,
@@ -755,6 +838,15 @@ class EvolutionarySearch:
                 produced += 1
                 continue
             drain()
+            if next_barrier is not None and not inflight \
+                    and state.generation >= next_barrier:
+                # pipeline fully drained at the barrier: this state is a
+                # consistent cut (no lookahead RNG draws beyond it)
+                self.save_state(state, ckpt_path)
+                saved_gen = state.generation
+                next_barrier = state.generation + barrier
+        if ckpt_path is not None and state.generation > saved_gen:
+            self.save_state(state, ckpt_path)
         return state
 
     # ------------------------------------------------------- checkpointing
@@ -786,17 +878,47 @@ class EvolutionarySearch:
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             _json.dump(payload, f)
+        if _os.path.exists(path):
+            # rotate: the previous checkpoint survives as `<path>.prev`, so
+            # a write that lands corrupt (torn disk, injected fault) still
+            # leaves one loadable generation behind (DESIGN.md §13)
+            _os.replace(path, path + ".prev")
         _os.replace(tmp, path)
+        if self.faults is not None:
+            spec = self.faults.fire("ckpt.save", path=path)
+            if spec is not None and spec.kind == "corrupt":
+                self.faults.corrupt_file(path)
 
     def load_state(self, path: str) -> NASState:
         """Restore a checkpoint.  Also restores this driver's RNG state (when
         present — older checkpoints load fine without it), so resuming
         reproduces the uninterrupted run bit-for-bit.
 
+        A checkpoint that fails to *parse* (truncated/corrupt JSON — the
+        write died mid-flight) falls back to the rotated ``<path>.prev``
+        with a warning instead of crashing: losing one generation beats
+        losing a days-long search.  Configuration errors (schema mismatch)
+        still raise — falling back would mask them.
+
         The persisted objective schema is validated against this driver's
         backend: resuming a checkpoint under a different platform set would
         silently misread the cheap matrix, so a mismatch raises.  Pre-schema
         checkpoints are accepted when the column count matches."""
+        import json as _json
+        import os as _os
+        try:
+            return self._load_checkpoint(path)
+        except (_json.JSONDecodeError, KeyError, TypeError, IndexError,
+                UnicodeDecodeError) as e:
+            prev = path + ".prev"
+            if not _os.path.exists(prev):
+                raise
+            self.log(f"[nas] WARNING: checkpoint {path} is corrupt "
+                     f"({type(e).__name__}: {e}) — falling back to the "
+                     f"rotated previous checkpoint {prev}")
+            return self._load_checkpoint(prev)
+
+    def _load_checkpoint(self, path: str) -> NASState:
         import json as _json
         with open(path) as f:
             payload = _json.load(f)
@@ -843,30 +965,79 @@ class EvolutionarySearch:
 
     def run_resumable(self, ckpt_path: str,
                       generations: Optional[int] = None) -> NASState:
-        """Resume from `ckpt_path` if present; checkpoint every generation.
+        """Resume from `ckpt_path` if present; checkpoint as the search
+        progresses (DESIGN.md §13).
 
-        The ``off`` and ``host_overlap`` pipelines checkpoint after every
-        generation (their trajectories are identical, so a search may even
-        resume under the other mode).  The ``async`` pipeline keeps
-        several generations in flight — there is no consistent
-        per-generation cut to persist — so it is rejected here; run it via
-        :meth:`run`."""
-        if self.cfg.pipeline == "async":
-            raise ValueError(
-                "pipeline='async' does not support per-generation "
-                "checkpoint/resume (several generations are in flight); "
-                "use run(), or pipeline='host_overlap' for the overlapped "
-                "deterministic loop")
+        The ``off`` and ``host_overlap`` pipelines checkpoint every
+        ``ckpt_every`` generations (default 1; their trajectories are
+        identical, so a search may even resume under the other mode).  The
+        ``async`` pipeline checkpoints at *drain barriers*: every
+        ``ckpt_every`` (default ``lookahead + 1``) generations it stops
+        admitting lookahead work, drains the in-flight generations, and
+        persists the consistent state — so a preempted async search resumes
+        from the last barrier instead of being rejected.
+
+        Preemption is graceful: ``KeyboardInterrupt`` (and ``SIGTERM``,
+        translated when running in the main thread) persists the last
+        consistent state before re-raising, so the next invocation resumes
+        exactly where this one stopped — bit-identically for the
+        deterministic pipelines."""
         import os as _os
+        import signal as _signal
+        target = generations or self.cfg.generations
         if _os.path.exists(ckpt_path):
             state = self.load_state(ckpt_path)
             self.log(f"[nas] resumed at generation {state.generation}")
         else:
             state = self.init_state()
-        target = generations or self.cfg.generations
-        while state.generation < target:
-            state = self.step(state)
+            # persist immediately: a preemption before the first checkpoint
+            # must not lose the (expensive) initial population training
             self.save_state(state, ckpt_path)
+        saved_gen = state.generation
+
+        def _on_sigterm(signum, frame):
+            raise KeyboardInterrupt("SIGTERM")
+
+        installed, old_handler = False, None
+        try:
+            old_handler = _signal.signal(_signal.SIGTERM, _on_sigterm)
+            installed = True
+        except ValueError:
+            pass  # not the main thread: SIGTERM stays with the host app
+        try:
+            if self.cfg.pipeline == "async":
+                if state.generation < target:
+                    state = self._run_async(target - state.generation,
+                                            state=state,
+                                            ckpt_path=ckpt_path)
+                saved_gen = state.generation
+            else:
+                every = self.cfg.ckpt_every or 1
+                while state.generation < target:
+                    if self.faults is not None:
+                        self.faults.fire("search.generation",
+                                         generation=state.generation)
+                    state = self.step(state)
+                    if state.generation - saved_gen >= every \
+                            or state.generation >= target:
+                        self.save_state(state, ckpt_path)
+                        saved_gen = state.generation
+        except KeyboardInterrupt:
+            # graceful preemption: the state object always sits at the last
+            # *completed* generation (selection publishes atomically), so
+            # persist it if the disk is behind, then let the signal
+            # propagate to the host
+            if state.generation > saved_gen:
+                self.save_state(state, ckpt_path)
+            self.log(f"[nas] preempted at generation {state.generation}; "
+                     f"checkpoint {ckpt_path} holds a consistent resume "
+                     f"point")
+            raise
+        finally:
+            if installed:
+                _signal.signal(_signal.SIGTERM,
+                               old_handler if old_handler is not None
+                               else _signal.SIG_DFL)
         return state
 
     # ---------------------------------------------------------------- report

@@ -242,9 +242,17 @@ def _train_bucket(genomes: List[Genome], seeds: Sequence[int],
     out = []
     for k in range(len(genomes)):
         det, fa = detection_rates(pred[k], y_va)
+        vl = float(nll[k]) / len(y_va)
+        if not np.isfinite(vl):
+            # per-candidate quarantine (DESIGN.md §13): one diverged
+            # candidate (NaN/inf loss poisons its NLL) must not fail the
+            # whole vmap bucket — it alone reports pessimistic rates (its
+            # argmax predictions are garbage) while its bucket-mates keep
+            # their real results.  The non-finite val_loss rides along so
+            # the search driver maps it to the schema-pessimistic row.
+            det, fa = 0.0, 1.0
         out.append(TrainResult(detection_rate=det, false_alarm_rate=fa,
-                               val_loss=float(nll[k]) / len(y_va),
-                               steps=steps))
+                               val_loss=vl, steps=steps))
     return out
 
 

@@ -17,6 +17,23 @@ Wall-clock behaviour: ``run(requests)`` honours each request's
 ``arrival_s`` (open-loop load — the Poisson generator in serve/loadgen.py);
 ``realtime=False`` collapses arrivals to "already queued" for deterministic
 tests.
+
+Failure semantics (DESIGN.md §13) — an always-on edge deployment needs
+explicit answers to "what if it never finishes / keeps arriving / must
+shut down":
+
+* **deadlines** — a request carrying ``deadline_s`` (latency budget from
+  arrival) is expired the moment the budget runs out: its slot is
+  reclaimed for the next waiting request and the partial output is
+  returned flagged ``expired`` (on the virtual clock one decode step is
+  one second, so budgets are deterministic step counts in tests);
+* **backpressure** — ``EngineConfig.max_queue`` bounds the admission
+  queue; a submit over the bound is *rejected explicitly* (flagged
+  ``rejected``, returned unserved) instead of growing the queue without
+  limit;
+* **graceful drain** — :meth:`ServeEngine.drain` completes the in-flight
+  requests without admitting more work, the shutdown path that never
+  abandons a sequence mid-decode.
 """
 from __future__ import annotations
 
@@ -28,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.faults import FaultPlan
 from repro.serve.buckets import build_buckets
 
 
@@ -39,8 +57,12 @@ class ServeRequest:
     prompt: np.ndarray             # (len,) int32
     max_new: int
     arrival_s: float = 0.0         # offset from the run's t0 (open loop)
+    deadline_s: Optional[float] = None  # latency budget from arrival; the
+    #   engine reclaims the slot and returns partial output on expiry
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    expired: bool = False          # deadline ran out (out = partial tokens)
+    rejected: bool = False         # bounced off a full admission queue
     # measured lifecycle (seconds from the run's t0)
     t_arrival: float = 0.0
     t_admit: float = 0.0
@@ -64,13 +86,17 @@ class EngineConfig:
     max_prefill_batch: int = 8     # rows per prefill dispatch
     max_wait: int = 0              # admission rounds a ready request may be
     #   held to fill a denser bucket (0 = admit immediately; latency knob)
+    max_queue: Optional[int] = None  # admission-queue bound: a submit over
+    #   it is rejected explicitly (backpressure).  None = unbounded
 
 
 class ServeEngine:
     """Slot-cache continuous batching over a ModelBundle's slotted path."""
 
-    def __init__(self, bundle, params, config: Optional[EngineConfig] = None):
+    def __init__(self, bundle, params, config: Optional[EngineConfig] = None,
+                 faults: Optional[FaultPlan] = None):
         cfg = config or EngineConfig()
+        self.faults = faults  # "serve.decode" inject point (DESIGN.md §13)
         if bundle.decode_slotted is None or bundle.prefill_slotted is None:
             raise ValueError(
                 f"family {bundle.cfg.family!r} has no slotted serving path "
@@ -122,15 +148,27 @@ class ServeEngine:
         self.last_tok = np.zeros((cfg.slots,), np.int32)
         self.waiting: List[ServeRequest] = []   # arrived, not yet admitted
         self.finished: List[ServeRequest] = []
+        self.rejected: List[ServeRequest] = []  # bounced at admission
         self.decode_steps = 0
         self.prefill_calls = 0
 
-    def submit(self, req: ServeRequest) -> None:
+    def submit(self, req: ServeRequest) -> bool:
+        """Queue a request.  Returns ``False`` (and flags the request
+        ``rejected``) when the bounded admission queue is full — explicit
+        backpressure the caller can act on, instead of unbounded queue
+        growth.  Malformed requests still raise."""
         if len(req.prompt) > self.cfg.cache_len:
             raise ValueError(f"request {req.rid}: prompt length "
                              f"{len(req.prompt)} exceeds cache_len "
                              f"{self.cfg.cache_len}")
+        if self.cfg.max_queue is not None \
+                and len(self.waiting) >= self.cfg.max_queue:
+            req.rejected = True
+            req.t_done = req.t_arrival
+            self.rejected.append(req)
+            return False
         self.waiting.append(req)
+        return True
 
     # ------------------------------------------------------------ admission
     def _admit(self, now: float) -> bool:
@@ -174,6 +212,35 @@ class ServeEngine:
             self.finished.append(req)
             self.active[slot] = None
 
+    def _expire(self, now: float) -> int:
+        """Reclaim slots (and drop queued requests) whose deadline passed.
+        An expired in-flight request keeps its partial output; the freed
+        slot is immediately admittable.  Returns the number expired."""
+        n = 0
+        for s, req in enumerate(self.active):
+            if req is None or req.deadline_s is None:
+                continue
+            if now - req.t_arrival >= req.deadline_s:
+                req.expired = True
+                req.done = True
+                req.t_done = now
+                self.finished.append(req)
+                self.active[s] = None   # slot reclaimed
+                n += 1
+        still = []
+        for req in self.waiting:
+            if req.deadline_s is not None \
+                    and now - req.t_arrival >= req.deadline_s:
+                req.expired = True
+                req.done = True
+                req.t_done = now
+                self.finished.append(req)
+                n += 1
+            else:
+                still.append(req)
+        self.waiting = still
+        return n
+
     # --------------------------------------------------------------- decode
     def step(self, now: float) -> int:
         """One jitted decode step over every slot.  Returns the number of
@@ -206,9 +273,13 @@ class ServeEngine:
         ``realtime=True`` honours each request's ``arrival_s`` against the
         wall clock (open-loop load; the loop sleeps when idle before the
         next arrival).  ``realtime=False`` runs on a virtual clock that
-        ticks once per decode step — ``arrival_s`` is then "arrives after
-        N decode steps", which makes mid-flight admission deterministic
-        for tests.
+        ticks once per decode step — ``arrival_s`` (and ``deadline_s``)
+        are then counted in decode steps, which makes mid-flight
+        admission and deadline expiry deterministic for tests.
+
+        Every submitted request comes back exactly once: completed,
+        ``expired`` (deadline hit; partial output), or ``rejected``
+        (bounced off a full admission queue, never served).
         """
         self.reset()
         pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
@@ -226,23 +297,69 @@ class ServeEngine:
                     and pending:
                 vnow = pending[0].arrival_s  # idle jump to the next arrival
                 continue
+            expired = self._expire(now)
             admitted = self._admit(now)
+            if self.faults is not None:
+                # injected decode stall: the engine owns its clocks, so the
+                # plan is consulted (check), never slept inside (fire) —
+                # the virtual clock advances deterministically instead
+                spec = self.faults.check("serve.decode",
+                                         step=self.decode_steps)
+                if spec is not None and spec.kind in ("hang", "stall"):
+                    if realtime:
+                        time.sleep(spec.hang_s)
+                    else:
+                        vnow += spec.hang_s
             produced = self.step(clock() if realtime else vnow)
             if not realtime:
                 vnow += 1.0
-            if produced == 0 and not admitted:
+            if produced == 0 and not admitted and not expired:
                 if realtime and pending and not self.waiting \
                         and not any(self.active):
                     # idle gap in the open-loop schedule
                     gap = pending[0].arrival_s - (time.monotonic() - t0)
                     if gap > 0:
                         time.sleep(min(gap, 0.05))
-            if log and admitted:
+            if log and (admitted or expired):
                 log(f"[serve] t={now:7.3f}s active="
                     f"{sum(r is not None for r in self.active)} "
                     f"waiting={len(self.waiting)} pending={len(pending)} "
                     f"finished={len(self.finished)}")
-        return sorted(self.finished, key=lambda r: r.rid)
+        return sorted(self.finished + self.rejected, key=lambda r: r.rid)
+
+    # ---------------------------------------------------------------- drain
+    def drain(self, *, realtime: bool = False,
+              log: Optional[Callable[[str], None]] = None
+              ) -> List[ServeRequest]:
+        """Graceful shutdown: decode the in-flight requests to completion
+        WITHOUT admitting any more work.  Requests still waiting in the
+        admission queue are left there untouched — the caller reroutes or
+        fails them explicitly.  Returns the requests that finished during
+        the drain (deadlines stay live, measured on the drain's own
+        clock)."""
+        t0 = time.monotonic()
+        vnow = 0.0
+        before = len(self.finished)
+        while any(r is not None for r in self.active):
+            now = (time.monotonic() - t0) if realtime else vnow
+            # expire only in-flight work: queued requests are not ours to
+            # time out here — we are shutting down, not serving
+            for s, req in enumerate(self.active):
+                if req is not None and req.deadline_s is not None \
+                        and now - req.t_arrival >= req.deadline_s:
+                    req.expired = True
+                    req.done = True
+                    req.t_done = now
+                    self.finished.append(req)
+                    self.active[s] = None
+            self.step(now)
+            if not realtime:
+                vnow += 1.0
+            if log:
+                log(f"[serve] drain t={now:7.3f}s active="
+                    f"{sum(r is not None for r in self.active)} "
+                    f"waiting={len(self.waiting)} (held)")
+        return self.finished[before:]
 
 
 # ---------------------------------------------------------------------------

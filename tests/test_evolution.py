@@ -216,11 +216,20 @@ def test_unknown_pipeline_mode_rejected():
                            log=lambda *_: None)
 
 
-def test_async_pipeline_rejects_checkpoint_resume(tmp_path):
-    import pytest
+def test_async_pipeline_checkpoints_at_drain_barriers(tmp_path):
+    """``run_resumable`` under ``pipeline='async'`` checkpoints at drain
+    barriers (DESIGN.md §13) instead of rejecting: the run completes to
+    target and leaves a loadable, fully-trained checkpoint behind."""
+    path = str(tmp_path / "ckpt.json")
     s = pipeline_search("async")
-    with pytest.raises(ValueError, match="async"):
-        s.run_resumable(str(tmp_path / "ckpt.json"))
+    final = s.run_resumable(path)
+    assert final.generation == 4
+    restored = pipeline_search("async").load_state(path)
+    assert restored.generation == 4
+    assert list(restored.pop.phash) == list(final.pop.phash)
+    np.testing.assert_array_equal(restored.pop.expensive,
+                                  final.pop.expensive)
+    assert restored.pop.trained_mask.all()
 
 
 def test_device_imbalance_helper():

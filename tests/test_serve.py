@@ -205,6 +205,70 @@ def test_engine_rejects_unservable_family_and_prompts():
             rid=0, prompt=np.zeros(CACHE_LEN + 1, np.int32), max_new=1))
 
 
+# ------------------------------------------- failure semantics (§13)
+
+
+def test_engine_deadline_expiry_reclaims_slot():
+    """A request that blows its latency budget is expired: its partial
+    output is a prefix of the reference, the freed slot serves the queue,
+    and every surviving request still matches the scalar reference."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _requests(cfg, [(5, 20), (7, 6), (6, 8)])
+    refs = _refs(bundle, params, reqs)
+    reqs[0].deadline_s = 5.0          # virtual clock: a 5-decode-step budget
+    engine = ServeEngine(bundle, params, EngineConfig(
+        slots=2, cache_len=CACHE_LEN, pad_to=1))
+    done = engine.run(reqs)
+    by = {r.rid: r for r in done}
+    assert by[0].expired and by[0].done and not by[0].rejected
+    assert 0 < len(by[0].out) < 20    # partial, not abandoned silently
+    assert by[0].out == refs[0][:len(by[0].out)]
+    for rid in (1, 2):                # survivors: exact parity
+        assert not by[rid].expired and by[rid].out == refs[rid]
+    # the reclaimed slot admitted the queued request mid-run
+    assert by[2].t_admit >= 5.0
+
+
+def test_engine_bounded_queue_rejects_overflow():
+    """max_queue=2 with one slot: a burst of 5 bounces 3 explicitly —
+    flagged ``rejected``, returned unserved — and the admitted ones still
+    decode bit-identically."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _requests(cfg, [(4, 4), (5, 4), (6, 4), (7, 4), (8, 4)])
+    refs = _refs(bundle, params, reqs)
+    engine = ServeEngine(bundle, params, EngineConfig(
+        slots=1, cache_len=CACHE_LEN, pad_to=1, max_queue=2))
+    done = engine.run(reqs)
+    assert len(done) == 5             # every request comes back exactly once
+    served = [r for r in done if not r.rejected]
+    bounced = [r for r in done if r.rejected]
+    assert [r.rid for r in bounced] == [2, 3, 4]
+    assert all(not r.out and not r.done for r in bounced)
+    assert len(engine.rejected) == 3
+    for r in served:
+        assert r.out == refs[r.rid]
+
+
+def test_engine_drain_completes_in_flight_only():
+    """Graceful shutdown: drain() decodes the in-flight requests to
+    completion (bit-identical) without touching the admission queue."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _requests(cfg, [(5, 8), (9, 6), (6, 10)])
+    refs = _refs(bundle, params, reqs)
+    engine = ServeEngine(bundle, params, EngineConfig(
+        slots=2, cache_len=CACHE_LEN, pad_to=1))
+    for r in reqs:
+        assert engine.submit(r)       # unbounded queue: all accepted
+    engine._admit(0.0)                # rids 0,1 in flight; rid 2 queued
+    engine.step(0.0)                  # mid-decode when the drain begins
+    done = engine.drain()
+    assert {r.rid for r in done} == {0, 1}
+    for r in done:
+        assert not r.expired and r.out == refs[r.rid]
+    assert [r.rid for r in engine.waiting] == [2]   # held for the caller
+    assert all(s is None for s in engine.active)
+
+
 # ---------------------------------------------- wave baseline (regression)
 
 
