@@ -38,12 +38,31 @@ Gates BENCH_faults.json (benchmarks/fault_bench.py):
   the ceiling catches recovery degenerating into retry storms or
   serialized backoff.
 
+Gates BENCH_router.json (benchmarks/router_bench.py):
+
+* ``parity_ok`` must be true — every request the replicated router
+  completed (fault-free, replica-loss, overload) matched the scalar
+  greedy reference bit for bit, every run returned every submitted
+  request (zero silent drops);
+* ``goodput_ratio_replica_loss >= --min-router-goodput`` (default 0.6,
+  the ISSUE's acceptance floor): goodput with one of two replicas killed
+  mid-run, as a fraction of the fault-free run.  Virtual-clock ratio —
+  deterministic on any machine.
+
+Baseline regression (``--against-baseline DIR --max-regression PCT``):
+every gated json is also compared against the committed baseline copy in
+DIR (benchmarks/baselines/).  Only the machine-relative *ratio* metrics
+are compared — higher-is-better ratios may not drop more than PCT
+percent below baseline, lower-is-better ratios may not rise more than
+PCT percent above — absolute wall times are never compared.
+
 Exit code 1 on any violation, so the build fails.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -130,6 +149,99 @@ def check_faults(path: str, max_slowdown: float) -> list:
     return failures
 
 
+def check_router(path: str, min_goodput: float) -> list:
+    with open(path) as f:
+        payload = json.load(f)
+    summary = payload.get("summary")
+    if not summary:
+        return [f"{path}: no gate summary (router_bench.py --json writes "
+                f"it)"]
+    failures = []
+    if not summary.get("parity_ok", False):
+        failures.append(
+            f"{path}: parity_ok={summary.get('parity_ok')} — a routed "
+            f"request diverged from the scalar reference or a run "
+            f"dropped a request silently")
+    ratio = summary.get("goodput_ratio_replica_loss", 0.0)
+    if ratio < min_goodput:
+        failures.append(
+            f"{path}: goodput_ratio_replica_loss={ratio:.2f}x < floor "
+            f"{min_goodput:.2f}x — losing one of two replicas costs more "
+            f"goodput than it should (failover/rebalance regression)")
+    if summary.get("shed_overload", 0) <= 0:
+        failures.append(
+            f"{path}: shed_overload={summary.get('shed_overload')} — the "
+            f"overload run shed nothing; admission control is not "
+            f"engaging (or the workload no longer overloads)")
+    print(f"[gate] {path}: parity_ok={summary.get('parity_ok')} "
+          f"goodput_ratio_replica_loss={ratio:.2f}x "
+          f"(floor {min_goodput:.2f}x) "
+          f"p99_ratio={summary.get('p99_ratio_replica_loss', 0.0):.2f}x "
+          f"overload_vs_single="
+          f"{summary.get('goodput_ratio_overload_vs_single', 0.0):.2f}x "
+          f"shed={summary.get('shed_overload')} "
+          f"failovers={summary.get('failovers')}")
+    return failures
+
+
+# Machine-relative ratio metrics compared against the committed baseline:
+# (metric, higher_is_better).  Absolute wall times are never compared, and
+# neither are wall-clock-noisy ratios (realtime p99 multiples, retry
+# backoff slowdowns) — those stay bounded by their absolute gates above.
+# The router ratios run on the virtual clock and are exactly deterministic.
+BASELINE_METRICS = {
+    "pipeline": [("speedup_async", True)],
+    "serve": [("speedup_vs_wave", True)],
+    "faults": [],
+    "router": [("goodput_ratio_replica_loss", True),
+               ("goodput_ratio_overload_vs_single", True),
+               ("p99_ratio_replica_loss", False)],
+}
+
+
+def check_against_baseline(path: str, baseline_dir: str,
+                           max_regression_pct: float) -> list:
+    """Compare one bench json's ratio metrics against the committed
+    baseline copy of the same file.  A missing baseline file is a skip
+    (new bench), not a failure; a missing metric in the baseline is
+    skipped too (metric added since the baseline was cut)."""
+    base_path = os.path.join(baseline_dir, os.path.basename(path))
+    if not os.path.exists(base_path):
+        print(f"[gate] {path}: no baseline at {base_path} — skipped")
+        return []
+    with open(path) as f:
+        payload = json.load(f)
+    summary = payload.get("summary") or {}
+    bench = payload.get("bench")
+    with open(base_path) as f:
+        base = json.load(f).get("summary") or {}
+    failures = []
+    tol = max_regression_pct / 100.0
+    for metric, higher_better in BASELINE_METRICS.get(bench, []):
+        if metric not in summary or metric not in base:
+            continue
+        now, ref = float(summary[metric]), float(base[metric])
+        if ref == 0.0:
+            continue
+        if higher_better:
+            bound = ref * (1.0 - tol)
+            bad = now < bound
+            rel = (ref - now) / ref * 100.0
+        else:
+            bound = ref * (1.0 + tol)
+            bad = now > bound
+            rel = (now - ref) / ref * 100.0
+        if bad:
+            failures.append(
+                f"{path}: {metric}={now:.3f} regressed {rel:.0f}% vs "
+                f"baseline {ref:.3f} (allowed {max_regression_pct:.0f}%)")
+        print(f"[gate] {path} vs baseline: {metric}={now:.3f} "
+              f"(baseline {ref:.3f}, "
+              f"{'floor' if higher_better else 'ceiling'} {bound:.3f})"
+              f"{' FAIL' if bad else ''}")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("pipeline_json", nargs="?",
@@ -142,6 +254,9 @@ def main() -> None:
     ap.add_argument("--faults-json", default=None,
                     help="fault-recovery bench result (e.g. "
                          "BENCH_faults.json); omit to skip the fault gate")
+    ap.add_argument("--router-json", default=None,
+                    help="replicated-router bench result (e.g. "
+                         "BENCH_router.json); omit to skip the router gate")
     ap.add_argument("--min-speedup", type=float, default=1.2,
                     help="async overlap speedup floor (default 1.2)")
     ap.add_argument("--min-serve-speedup", type=float, default=3.0,
@@ -154,6 +269,16 @@ def main() -> None:
                     help="wall-time ceiling of the crash-and-recover run "
                          "as a multiple of the fault-free run "
                          "(default 5.0)")
+    ap.add_argument("--min-router-goodput", type=float, default=0.6,
+                    help="goodput floor under single-replica loss as a "
+                         "fraction of the fault-free run (default 0.6)")
+    ap.add_argument("--against-baseline", metavar="DIR", default=None,
+                    help="also compare each gated json's ratio metrics "
+                         "against the committed copy in DIR "
+                         "(benchmarks/baselines/)")
+    ap.add_argument("--max-regression", type=float, default=25.0,
+                    help="allowed percent regression vs the baseline "
+                         "ratios (default 25)")
     args = ap.parse_args()
     failures = check_pipeline(args.pipeline_json, args.min_speedup)
     if args.serve_json:
@@ -161,6 +286,14 @@ def main() -> None:
                                 args.max_p99_slowdown)
     if args.faults_json:
         failures += check_faults(args.faults_json, args.max_fault_slowdown)
+    if args.router_json:
+        failures += check_router(args.router_json, args.min_router_goodput)
+    if args.against_baseline:
+        for p in (args.pipeline_json, args.serve_json, args.faults_json,
+                  args.router_json):
+            if p:
+                failures += check_against_baseline(p, args.against_baseline,
+                                                   args.max_regression)
     for f in failures:
         print(f"[gate] FAIL: {f}", file=sys.stderr)
     if failures:

@@ -1,0 +1,252 @@
+"""Router bench: goodput + p99 under replica loss and overload (§14).
+
+Four deterministic virtual-clock runs over the reduced qwen2-0.5b config
+(one decode step = one virtual second, so every ratio below is
+machine-independent — the CI gate never compares absolute wall times):
+
+1. **router fault-free** — 2 engine replicas behind the ReplicaRouter,
+   open-loop Poisson arrivals with a loose deadline: the goodput and p99
+   baseline;
+2. **router replica-loss** — same workload, a seeded ``device_loss``
+   kills replica 0 mid-run: in-flight work fails over and re-decodes
+   bit-identically; goodput must stay ≥ 0.6x the fault-free run (the CI
+   gate: losing half the fleet costs less than half the goodput, because
+   the survivor keeps its slots full);
+3. **single engine, overload** — one engine under a heavy-tailed gamma
+   burst (cv=3) past its capacity, bounded queue + tight deadlines: the
+   degenerate deployment the router replaces;
+4. **router, overload** — the same overload into 2 replicas: more
+   goodput, and every dropped request is an *explicit* rejection (shed
+   counts in the summary; zero silent drops — submitted == served +
+   shed everywhere).
+
+Parity: every completed request must match the scalar greedy reference
+bit for bit (expired requests must be exact prefixes) in every run —
+failover and hedging are not allowed to change a single token.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core.faults import FaultPlan, FaultSpec
+from repro.models.registry import build_model
+from repro.serve import (
+    EngineConfig,
+    ReplicaRouter,
+    RouterConfig,
+    ServeEngine,
+    ServeRequest,
+    gamma_workload,
+    greedy_reference,
+    poisson_workload,
+)
+
+ARCH = "qwen2-0.5b"
+CACHE_LEN = 64
+SLOTS = 4              # per replica — the single-engine runs get the same
+PROMPT_LENS = (4, 8, 12, 16)
+OUT_LENS = (4, 6, 8)
+
+
+def _fresh(reqs: List[ServeRequest],
+           deadline_s: Optional[float] = None) -> List[ServeRequest]:
+    return [ServeRequest(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                         arrival_s=r.arrival_s, deadline_s=deadline_s)
+            for r in reqs]
+
+
+def _parity(done: List[ServeRequest], refs: Dict[int, List[int]]) -> bool:
+    for r in done:
+        if r.rejected:
+            if r.out:               # shed requests carry no tokens
+                return False
+        elif r.expired:
+            if r.out != refs[r.rid][:len(r.out)]:
+                return False
+        elif r.out != refs[r.rid]:
+            return False
+    return True
+
+
+def _goodput(done: List[ServeRequest]) -> Tuple[int, float, float]:
+    """(completed, virtual makespan, p99 virtual latency) of one run."""
+    ok = [r for r in done if r.done and not r.expired and not r.rejected]
+    span = max((r.t_done for r in ok), default=0.0)
+    p99 = float(np.percentile([r.latency_s for r in ok], 99)) if ok else 0.0
+    return len(ok), span, p99
+
+
+def run(log=print, smoke: bool = True, n_requests: Optional[int] = None,
+        seed: int = 0) -> Tuple[List[Dict], Dict]:
+    n = n_requests or (24 if smoke else 48)
+    cfg = reduced_config(ARCH)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    steady = poisson_workload(n, vocab_size=cfg.vocab_size, rate_per_s=2.0,
+                              prompt_lens=PROMPT_LENS, out_lens=OUT_LENS,
+                              seed=seed)
+    burst = gamma_workload(n, vocab_size=cfg.vocab_size, rate_per_s=8.0,
+                           cv=3.0, prompt_lens=PROMPT_LENS,
+                           out_lens=OUT_LENS, seed=seed + 1)
+    for r in burst:
+        r.rid += n          # disjoint rid space: refs are keyed by rid
+    refs: Dict[int, List[int]] = {}
+    dec = jax.jit(bundle.decode_step)
+    for r in steady + burst:
+        refs[r.rid] = greedy_reference(bundle, params, r.prompt, r.max_new,
+                                       CACHE_LEN, decode_jit=dec)
+    log(f"[router] workload: {n} steady (poisson 2/s) + {n} burst "
+        f"(gamma 8/s cv=3), {SLOTS} slots/replica")
+
+    ecfg = EngineConfig(slots=SLOTS, cache_len=CACHE_LEN, pad_to=8,
+                        max_prefill_batch=SLOTS)
+
+    # -- 1. router fault-free: the goodput/p99 baseline -------------------
+    router = ReplicaRouter(bundle, params, RouterConfig(replicas=2,
+                                                        engine=ecfg))
+    router.run(_fresh(steady, 30.0))                     # warm compiles
+    t0 = time.perf_counter()
+    done_ff = router.run(_fresh(steady, 30.0))
+    t_ff = time.perf_counter() - t0
+    ok_ff, span_ff, p99_ff = _goodput(done_ff)
+    good_ff = ok_ff / span_ff if span_ff else 0.0
+    par_ff = _parity(done_ff, refs)
+    log(f"[router] fault-free: {ok_ff}/{n} ok, makespan {span_ff:.0f}vs, "
+        f"goodput {good_ff:.3f} req/vs, p99 {p99_ff:.0f}vs, "
+        f"parity={par_ff}")
+
+    # -- 2. router under replica loss -------------------------------------
+    plan = FaultPlan([FaultSpec(site="serve.replica", kind="device_loss",
+                                when=lambda c: c["replica"] == 0
+                                and c["tick"] == 5)])
+    router_loss = ReplicaRouter(bundle, params,
+                                RouterConfig(replicas=2, engine=ecfg),
+                                faults=plan)
+    t0 = time.perf_counter()
+    done_loss = router_loss.run(_fresh(steady, 30.0))
+    t_loss = time.perf_counter() - t0
+    ok_loss, span_loss, p99_loss = _goodput(done_loss)
+    good_loss = ok_loss / span_loss if span_loss else 0.0
+    par_loss = _parity(done_loss, refs)
+    assert plan.fired("serve.replica", kind="device_loss")
+    goodput_ratio = good_loss / good_ff if good_ff else 0.0
+    p99_ratio = p99_loss / p99_ff if p99_ff else 0.0
+    s_loss = router_loss.stats
+    log(f"[router] replica-loss: {ok_loss}/{n} ok, goodput {good_loss:.3f} "
+        f"req/vs ({goodput_ratio:.2f}x fault-free), p99 {p99_loss:.0f}vs "
+        f"({p99_ratio:.2f}x), failovers={s_loss['failovers']}, "
+        f"quarantined={s_loss['quarantined']}, parity={par_loss}")
+
+    # -- 3. single engine under overload ----------------------------------
+    single = ServeEngine(bundle, params, EngineConfig(
+        slots=SLOTS, cache_len=CACHE_LEN, pad_to=8, max_prefill_batch=SLOTS,
+        max_queue=6))
+    t0 = time.perf_counter()
+    done_single = single.run(_fresh(burst, 12.0))
+    t_single = time.perf_counter() - t0
+    ok_single, span_single, p99_single = _goodput(done_single)
+    good_single = ok_single / span_single if span_single else 0.0
+    shed_single = sum(r.rejected for r in done_single)
+    par_single = _parity(done_single, refs)
+    log(f"[router] single overload: {ok_single}/{n} ok, "
+        f"{shed_single} shed, goodput {good_single:.3f} req/vs, "
+        f"parity={par_single}")
+
+    # -- 4. router under overload ------------------------------------------
+    router_ov = ReplicaRouter(bundle, params, RouterConfig(
+        replicas=2, engine=ecfg, max_queue=6))
+    t0 = time.perf_counter()
+    done_ov = router_ov.run(_fresh(burst, 12.0))
+    t_ov = time.perf_counter() - t0
+    ok_ov, span_ov, p99_ov = _goodput(done_ov)
+    good_ov = ok_ov / span_ov if span_ov else 0.0
+    s_ov = router_ov.stats
+    shed_ov = s_ov["shed_queue"] + s_ov["shed_deadline"]
+    par_ov = _parity(done_ov, refs)
+    overload_ratio = good_ov / good_single if good_single else 0.0
+    log(f"[router] router overload: {ok_ov}/{n} ok, {shed_ov} shed "
+        f"(queue={s_ov['shed_queue']} deadline={s_ov['shed_deadline']}), "
+        f"goodput {good_ov:.3f} req/vs ({overload_ratio:.2f}x single), "
+        f"parity={par_ov}")
+
+    # zero silent drops: every run returns every submitted request
+    drops_ok = (len(done_ff) == n and len(done_loss) == n
+                and len(done_single) == n and len(done_ov) == n)
+    parity_ok = bool(par_ff and par_loss and par_single and par_ov
+                     and drops_ok)
+
+    rows = [
+        {"name": "router_fault_free",
+         "us_per_call": t_ff * 1e6 / max(ok_ff, 1),
+         "derived": f"ok={ok_ff}/{n} goodput={good_ff:.3f}req/vs "
+                    f"p99={p99_ff:.0f}vs parity={par_ff}"},
+        {"name": "router_replica_loss",
+         "us_per_call": t_loss * 1e6 / max(ok_loss, 1),
+         "derived": f"ok={ok_loss}/{n} goodput_ratio={goodput_ratio:.2f}x "
+                    f"p99_ratio={p99_ratio:.2f}x "
+                    f"failovers={s_loss['failovers']} parity={par_loss}"},
+        {"name": "single_engine_overload",
+         "us_per_call": t_single * 1e6 / max(ok_single, 1),
+         "derived": f"ok={ok_single}/{n} shed={shed_single} "
+                    f"goodput={good_single:.3f}req/vs parity={par_single}"},
+        {"name": "router_overload",
+         "us_per_call": t_ov * 1e6 / max(ok_ov, 1),
+         "derived": f"ok={ok_ov}/{n} shed={shed_ov} "
+                    f"goodput_ratio_vs_single={overload_ratio:.2f}x "
+                    f"parity={par_ov}"},
+    ]
+    summary = {
+        "parity_ok": parity_ok,
+        "goodput_ratio_replica_loss": float(goodput_ratio),
+        "p99_ratio_replica_loss": float(p99_ratio),
+        "goodput_ratio_overload_vs_single": float(overload_ratio),
+        "shed_overload": int(shed_ov),
+        "shed_single_overload": int(shed_single),
+        "failovers": int(s_loss["failovers"]),
+        "quarantined": list(s_loss["quarantined"]),
+        "completed_fault_free": int(ok_ff),
+        "completed_replica_loss": int(ok_loss),
+        "n_requests": n,
+        "slots_per_replica": SLOTS,
+    }
+    return rows, summary
+
+
+def write_json(rows: List[Dict], summary: Optional[Dict],
+               path: str) -> None:
+    payload = {"bench": "router", "rows": rows}
+    if summary is not None:
+        payload["summary"] = summary
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="48 requests per workload (default: 24)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows + gate summary as JSON")
+    args = ap.parse_args()
+    log = lambda *a: print(*a, file=sys.stderr)  # noqa: E731
+    rows, summary = run(log=log, smoke=not args.full,
+                        n_requests=args.requests)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    if args.json:
+        write_json(rows, summary, args.json)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -57,6 +57,7 @@ def main() -> None:
         nas_loop_bench,
         population_eval_bench,
         roofline_table,
+        router_bench,
         serve_bench,
         train_bench,
     )
@@ -97,6 +98,13 @@ def main() -> None:
     if args.json:
         serve_bench.write_json(serve_rows, serve_summary, "BENCH_serve.json")
         print("# wrote BENCH_serve.json", file=sys.stderr)
+    router_rows, router_summary = router_bench.run(
+        log=lambda *a: print(*a, file=sys.stderr), smoke=not args.full)
+    rows += router_rows
+    if args.json:
+        router_bench.write_json(router_rows, router_summary,
+                                "BENCH_router.json")
+        print("# wrote BENCH_router.json", file=sys.stderr)
     rows += roofline_table.run(log=lambda *a: print(*a, file=sys.stderr))
     roofline_table.write_markdown(log=lambda *a: print(*a, file=sys.stderr))
 

@@ -94,6 +94,26 @@ def main():
     dt_warm = time.time() - t
     print(f"   32-window batch: {dt*1e3:.0f} ms cold (compile), "
           f"{dt_warm*1e3:.0f} ms warm; classes={np.bincount(preds).tolist()}")
+
+    # -- resilient serving (repro.serve.router, DESIGN.md §14) --
+    # The always-on deployment fronts N replicas of the winner behind one
+    # predict() that health-checks, fails over, and quarantines — here we
+    # *inject* a crash on replica 0's first batch to show the failover is
+    # invisible to the caller (same classes; repeated failures would
+    # quarantine the replica).  The
+    # token-level analogue for LM serving is ReplicaRouter
+    # (launch/serve.py --router --replicas 2), chaos-tested in
+    # tests/test_faults.py against a bit-identical greedy reference.
+    print("\n== resilient serving: replicated winner with injected crash ==")
+    from repro.core.faults import FaultPlan, FaultSpec
+    from repro.serve import replicate_winner
+    faults = FaultPlan([FaultSpec(site="router.dispatch", kind="crash",
+                                  at=(1,))], seed=0)
+    replicated = replicate_winner(winner, replicas=2, faults=faults)
+    preds_rep = replicated.classify(data_val[0][:32])
+    assert np.array_equal(preds, preds_rep)
+    print(f"   crash injected on replica 0 -> failover; "
+          f"stats={replicated.stats} (classes unchanged)")
     print(f"total {time.time()-t0:.1f}s")
 
 

@@ -897,7 +897,10 @@ class EvolutionarySearch:
         A checkpoint that fails to *parse* (truncated/corrupt JSON — the
         write died mid-flight) falls back to the rotated ``<path>.prev``
         with a warning instead of crashing: losing one generation beats
-        losing a days-long search.  Configuration errors (schema mismatch)
+        losing a days-long search.  When BOTH generations are torn (a
+        double fault) the caller gets one clean ``RuntimeError`` naming
+        both files and both parse errors — never a raw mid-parse traceback
+        from the fallback path.  Configuration errors (schema mismatch)
         still raise — falling back would mask them.
 
         The persisted objective schema is validated against this driver's
@@ -906,17 +909,25 @@ class EvolutionarySearch:
         checkpoints are accepted when the column count matches."""
         import json as _json
         import os as _os
+        torn = (_json.JSONDecodeError, KeyError, TypeError, IndexError,
+                UnicodeDecodeError)
         try:
             return self._load_checkpoint(path)
-        except (_json.JSONDecodeError, KeyError, TypeError, IndexError,
-                UnicodeDecodeError) as e:
+        except torn as e:
             prev = path + ".prev"
             if not _os.path.exists(prev):
                 raise
             self.log(f"[nas] WARNING: checkpoint {path} is corrupt "
                      f"({type(e).__name__}: {e}) — falling back to the "
                      f"rotated previous checkpoint {prev}")
-            return self._load_checkpoint(prev)
+            try:
+                return self._load_checkpoint(prev)
+            except torn as e2:
+                raise RuntimeError(
+                    f"both checkpoints are corrupt: {path} "
+                    f"({type(e).__name__}: {e}) and {prev} "
+                    f"({type(e2).__name__}: {e2}) — no loadable "
+                    f"generation survives; restart the search") from e2
 
     def _load_checkpoint(self, path: str) -> NASState:
         import json as _json

@@ -23,6 +23,10 @@ site                  where / context keys
                       (``generation``)
 ``ckpt.save``         a checkpoint was just written (``path``)
 ``serve.decode``      serve engine about to run a decode step (``step``)
+``serve.replica``     router health-checks a live serving replica at the
+                      top of a tick (``replica``, ``tick``, ``step``)
+``router.dispatch``   router about to hand a request to a replica
+                      (``rid``, ``replica``, ``tick``)
 ====================  ======================================================
 
 Fault kinds and their actions under :meth:`FaultPlan.fire`:
@@ -220,21 +224,47 @@ class FaultPlan:
             f.write(blob)
 
 
-def crash_every(n: int, *, site: str = "scheduler.job",
-                first_attempt_only: bool = True,
-                times: Optional[int] = None) -> FaultSpec:
-    """Convenience: crash every ``n``-th *job* at ``site``.
-
-    Keyed on the context's ``job_id``/``attempt`` (not the raw hit
-    counter), so the schedule is deterministic under any worker
-    interleaving: job ``n-1, 2n-1, ...`` fails its first attempt and
-    succeeds on retry — the canonical crash-and-recover drill."""
+def _job_keyed(n: int, kind: str, site: str, first_attempt_only: bool,
+               times: Optional[int]) -> FaultSpec:
+    """Job-keyed drill spec: fire ``kind`` on every ``n``-th job's first
+    attempt.  Keyed on the context's ``job_id``/``attempt`` (not the raw
+    hit counter), so the schedule is deterministic under any worker
+    interleaving."""
     def when(ctx: Dict[str, Any]) -> bool:
         jid = ctx.get("job_id")
         if jid is None or (jid + 1) % n != 0:
             return False
         return not first_attempt_only or ctx.get("attempt", 1) == 1
-    return FaultSpec(site=site, kind="crash", when=when, times=times)
+    return FaultSpec(site=site, kind=kind, when=when, times=times)
+
+
+def crash_every(n: int, *, site: str = "scheduler.job",
+                first_attempt_only: bool = True,
+                times: Optional[int] = None) -> FaultSpec:
+    """Convenience: crash every ``n``-th *job* at ``site``: job
+    ``n-1, 2n-1, ...`` fails its first attempt and succeeds on retry —
+    the canonical crash-and-recover drill."""
+    return _job_keyed(n, "crash", site, first_attempt_only, times)
+
+
+def device_loss_every(n: int, *, site: str = "scheduler.job",
+                      first_attempt_only: bool = True,
+                      times: Optional[int] = None) -> FaultSpec:
+    """Convenience: lose the device under every ``n``-th *job* — the
+    quarantine-and-rebalance drill (:class:`DeviceLost` retires the
+    device instantly; the job retries on a survivor)."""
+    return _job_keyed(n, "device_loss", site, first_attempt_only, times)
+
+
+def stall_every(n: int, hang_s: float, *, site: str = "serve.decode",
+                times: Optional[int] = None) -> FaultSpec:
+    """Convenience: stall every ``n``-th hit at ``site`` for ``hang_s``
+    (virtual seconds on clock-owning components, real sleep elsewhere) —
+    the straggler/heartbeat drill.  Counter-keyed: meant for
+    single-threaded sites (``serve.decode``, ``serve.replica``) where hit
+    order is deterministic."""
+    return FaultSpec(site=site, kind="stall", every=n, hang_s=hang_s,
+                     times=times)
 
 
 def nan_candidate_every(n: int, *, times: Optional[int] = None) -> FaultSpec:

@@ -13,6 +13,13 @@ admission, bucketed prefill, no wave barrier — DESIGN.md §12):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
       --requests 12 --max-new 16 --engine
+
+and the resilient deployment is the engine behind
+:class:`repro.serve.ReplicaRouter` (replicated dispatch with health
+checks, failover, load shedding and hedging — DESIGN.md §14):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+      --requests 12 --max-new 16 --router --replicas 2
 """
 from __future__ import annotations
 
@@ -129,6 +136,12 @@ def main(argv=None) -> None:
     ap.add_argument("--engine", action="store_true",
                     help="use the continuous-batching ServeEngine instead "
                          "of the wave-barrier baseline")
+    ap.add_argument("--router", action="store_true",
+                    help="front ServeEngine replicas with the ReplicaRouter "
+                         "(health checks, failover, shedding, hedging)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="replica count for --router (device-affine across "
+                         "jax.devices() when more than one is present)")
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -141,7 +154,17 @@ def main(argv=None) -> None:
                          max_new=args.max_new)
             for i in range(args.requests)]
     t0 = time.time()
-    if args.engine:
+    if args.router:
+        from repro.serve.router import ReplicaRouter, RouterConfig
+        devices = jax.devices()
+        router = ReplicaRouter(bundle, params, RouterConfig(
+            replicas=args.replicas,
+            engine=EngineConfig(slots=args.slots, cache_len=64,
+                                pad_to=8 if bundle.prefill_pads else 1)),
+            devices=devices if len(devices) > 1 else None)
+        done = router.run(reqs)
+        print(f"router stats: {router.stats}")
+    elif args.engine:
         engine = ServeEngine(bundle, params, EngineConfig(
             slots=args.slots, cache_len=64,
             pad_to=8 if bundle.prefill_pads else 1))

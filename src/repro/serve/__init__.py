@@ -1,10 +1,15 @@
-"""Continuous-batching inference serving (DESIGN.md §12).
+"""Continuous-batching inference serving (DESIGN.md §12, §14).
 
 * :class:`~repro.serve.engine.ServeEngine` — slot-cache continuous
   batching over a ModelBundle's slotted prefill/decode path.
-* :mod:`repro.serve.loadgen` — open-loop Poisson workloads + latency stats.
+* :class:`~repro.serve.router.ReplicaRouter` — N engine replicas behind
+  one submit/run/drain API: health-checked dispatch, failover, load
+  shedding, hedged requests.
+* :mod:`repro.serve.loadgen` — open-loop Poisson / heavy-tail / burst
+  workloads + latency stats.
 * :func:`~repro.serve.winner.serve_winner` — genome front-end: NAS winner
-  → train → compile → serve (search → implement → deploy).
+  → train → compile → serve (search → implement → deploy);
+  :func:`~repro.serve.winner.replicate_winner` adds replicated dispatch.
 """
 from repro.serve.buckets import PrefillBucket, build_buckets
 from repro.serve.engine import (
@@ -13,19 +18,37 @@ from repro.serve.engine import (
     ServeRequest,
     greedy_reference,
 )
-from repro.serve.loadgen import latency_stats, poisson_workload
-from repro.serve.winner import ServableWinner, compile_winner, serve_winner
+from repro.serve.loadgen import (
+    gamma_workload,
+    latency_stats,
+    onoff_workload,
+    poisson_workload,
+)
+from repro.serve.router import ReplicaRouter, RouterConfig
+from repro.serve.winner import (
+    ReplicatedWinner,
+    ServableWinner,
+    compile_winner,
+    replicate_winner,
+    serve_winner,
+)
 
 __all__ = [
     "EngineConfig",
     "PrefillBucket",
+    "ReplicaRouter",
+    "ReplicatedWinner",
+    "RouterConfig",
     "ServableWinner",
     "ServeEngine",
     "ServeRequest",
     "build_buckets",
     "compile_winner",
+    "gamma_workload",
     "greedy_reference",
     "latency_stats",
+    "onoff_workload",
     "poisson_workload",
+    "replicate_winner",
     "serve_winner",
 ]

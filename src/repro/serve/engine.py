@@ -34,6 +34,17 @@ shut down":
 * **graceful drain** — :meth:`ServeEngine.drain` completes the in-flight
   requests without admitting more work, the shutdown path that never
   abandons a sequence mid-decode.
+
+Replication hooks (DESIGN.md §14): the engine is also the unit a
+:class:`~repro.serve.router.ReplicaRouter` replicates, so it exposes the
+health/metrics surface the router dispatches on — :meth:`tick` (one
+scheduling round on the *caller's* clock: expire → admit → decode),
+:meth:`cancel` (withdraw a request without recording a result — the
+hedge-loser / failover path), :meth:`take_finished` (drain completions
+incrementally), and the :attr:`in_flight` / :attr:`queue_depth` /
+:attr:`has_work` load metrics.  ``decode_steps`` doubles as the heartbeat
+counter: a replica with work whose ``decode_steps`` stops advancing is
+stalled.
 """
 from __future__ import annotations
 
@@ -170,14 +181,51 @@ class ServeEngine:
         self.waiting.append(req)
         return True
 
+    def cancel(self, rid: int) -> Optional[ServeRequest]:
+        """Withdraw a request without recording a result: an in-flight
+        request's slot is reclaimed, a queued one leaves the queue.  The
+        router's hedge-loser and failover path — the caller owns the
+        request's fate.  Returns the withdrawn request, or ``None`` when
+        ``rid`` is not held here (already finished, or never submitted)."""
+        for s, r in enumerate(self.active):
+            if r is not None and r.rid == rid:
+                self.active[s] = None
+                return r
+        for i, r in enumerate(self.waiting):
+            if r.rid == rid:
+                return self.waiting.pop(i)
+        return None
+
+    def take_finished(self) -> List[ServeRequest]:
+        """Drain the finished list (completed + expired since the last
+        take).  The router's per-tick completion collector; :meth:`run`
+        keeps its own accounting and never calls this."""
+        out = self.finished
+        self.finished = []
+        return out
+
+    # ----------------------------------------------------- health / metrics
+    @property
+    def in_flight(self) -> List[ServeRequest]:
+        """Requests currently occupying slots."""
+        return [r for r in self.active if r is not None]
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(r is not None for r in self.active)
+
     # ------------------------------------------------------------ admission
-    def _admit(self, now: float) -> bool:
+    def _admit(self, now: float) -> int:
         """Fill free slots from the waiting queue (FCFS), one bucketed
-        prefill dispatch per padded prompt length.  Returns True if any
-        request was admitted."""
+        prefill dispatch per padded prompt length.  Returns the number of
+        requests admitted."""
         free = [s for s, r in enumerate(self.active) if r is None]
         if not free or not self.waiting:
-            return False
+            return 0
         take = min(len(free), len(self.waiting))
         reqs = self.waiting[:take]
         del self.waiting[:take]
@@ -201,7 +249,7 @@ class ServeEngine:
                 self.active[slot] = req
                 self.last_tok[slot] = first[row]
                 self._maybe_finish(slot, now)
-        return True
+        return take
 
     def _maybe_finish(self, slot: int, now: float) -> None:
         req = self.active[slot]
@@ -263,6 +311,35 @@ class ServeEngine:
             self._maybe_finish(s, now)
         return produced
 
+    # ----------------------------------------------------------------- tick
+    def tick(self, now: float, *, realtime: bool = False
+             ) -> Dict[str, float]:
+        """One scheduling round on the caller's clock: expire deadlines,
+        admit waiting requests (bucketed prefill), one jitted decode step.
+        The router drives its replicas through this — each replica advances
+        exactly one round per router tick, so a shared virtual clock stays
+        meaningful across replicas.
+
+        Returns ``{"produced", "admitted", "expired", "stall_s"}`` counts;
+        ``stall_s`` is the injected ``serve.decode`` stall the caller must
+        add to its virtual clock (``realtime=True`` sleeps it here)."""
+        expired = self._expire(now)
+        admitted = self._admit(now)
+        stall_s = 0.0
+        if self.faults is not None:
+            # injected decode stall: the engine owns no clock of its own, so
+            # the plan is consulted (check), never slept inside (fire) —
+            # the caller's virtual clock advances deterministically instead
+            spec = self.faults.check("serve.decode", step=self.decode_steps)
+            if spec is not None and spec.kind in ("hang", "stall"):
+                if realtime:
+                    time.sleep(spec.hang_s)
+                else:
+                    stall_s = spec.hang_s
+        produced = self.step(now + stall_s)
+        return {"produced": produced, "admitted": admitted,
+                "expired": expired, "stall_s": stall_s}
+
     # ------------------------------------------------------------------ run
     def run(self, requests: Sequence[ServeRequest], *,
             realtime: bool = False,
@@ -297,22 +374,11 @@ class ServeEngine:
                     and pending:
                 vnow = pending[0].arrival_s  # idle jump to the next arrival
                 continue
-            expired = self._expire(now)
-            admitted = self._admit(now)
-            if self.faults is not None:
-                # injected decode stall: the engine owns its clocks, so the
-                # plan is consulted (check), never slept inside (fire) —
-                # the virtual clock advances deterministically instead
-                spec = self.faults.check("serve.decode",
-                                         step=self.decode_steps)
-                if spec is not None and spec.kind in ("hang", "stall"):
-                    if realtime:
-                        time.sleep(spec.hang_s)
-                    else:
-                        vnow += spec.hang_s
-            produced = self.step(clock() if realtime else vnow)
+            t = self.tick(clock() if realtime else vnow, realtime=realtime)
+            produced, admitted, expired = (t["produced"], t["admitted"],
+                                           t["expired"])
             if not realtime:
-                vnow += 1.0
+                vnow += 1.0 + t["stall_s"]
             if produced == 0 and not admitted and not expired:
                 if realtime and pending and not self.waiting \
                         and not any(self.active):

@@ -19,7 +19,9 @@ from repro.core.faults import (
     InjectedCrash,
     Preemption,
     crash_every,
+    device_loss_every,
     nan_candidate_every,
+    stall_every,
 )
 from repro.core.scheduler import DynamicScheduler
 from repro.core.trainer import TrainResult
@@ -149,6 +151,35 @@ def test_last_live_device_is_never_quarantined():
     assert all(r.attempts == 2 for r in res)
 
 
+def test_device_loss_every_drill_helper():
+    """device_loss_every mirrors crash_every (job-keyed, so deterministic
+    under any worker interleaving) but retires the device instead of just
+    failing the attempt."""
+    plan = FaultPlan([device_loss_every(5, times=1)])
+    sched = DynamicScheduler(n_workers=2, max_retries=2, speculate=False,
+                             devices=["dev:0", "dev:1"],
+                             backoff_base_s=0.001, faults=plan)
+    run = sched.submit([lambda device=None, i=i: i for i in range(8)])
+    res = run.wait()
+    assert all(r.ok for r in res) and len(res) == 8
+    events = plan.fired(kind="device_loss")
+    assert [e.ctx["job_id"] for e in events] == [4]   # every 5th job
+    assert run.stats["quarantined"] == 1              # device retired
+
+
+def test_stall_every_drill_helper():
+    """stall_every schedules counter-keyed stalls: the clock-owning caller
+    receives the spec (check, never fire) and advances its own time."""
+    spec = stall_every(3, 2.5)
+    assert (spec.site, spec.kind, spec.hang_s) == ("serve.decode", "stall",
+                                                   2.5)
+    plan = FaultPlan([stall_every(3, 2.5, site="serve.replica", times=2)])
+    hits = [plan.check("serve.replica", replica=0, tick=t, step=t)
+            for t in range(9)]
+    assert [i + 1 for i, s in enumerate(hits) if s is not None] == [3, 6]
+    assert all(s.hang_s == 2.5 for s in hits if s is not None)
+
+
 # ------------------------------------------------------- search-level chaos
 
 
@@ -258,6 +289,55 @@ def test_corrupt_checkpoint_without_prev_still_raises(tmp_path):
         _search().load_state(path)
 
 
+def test_both_checkpoints_torn_raises_clean_error(tmp_path):
+    """The double fault: `<path>` AND `<path>.prev` both torn.  The caller
+    gets one clean RuntimeError naming both files and both parse errors —
+    never a raw traceback from mid-parse of the fallback."""
+    path = str(tmp_path / "ckpt.json")
+    with open(path, "w") as f:
+        f.write('{"generation": 2, "hist')            # torn current
+    with open(path + ".prev", "w") as f:
+        f.write('{"generation": 1, "population": [')  # torn previous
+    with pytest.raises(RuntimeError,
+                       match="both checkpoints are corrupt") as exc:
+        _search().load_state(path)
+    msg = str(exc.value)
+    assert path in msg and path + ".prev" in msg
+    assert "JSONDecodeError" in msg
+    # the underlying parse error is chained for debugging, not surfaced raw
+    assert isinstance(exc.value.__cause__, json.JSONDecodeError)
+
+
+def test_two_consecutive_torn_save_cycles_fall_back(tmp_path):
+    """Two run→torn-final-save cycles in a row: each cycle's rotation keeps
+    one good generation behind the torn write, so each load falls back
+    cleanly and the twice-resumed search is bit-identical to an
+    uninterrupted one."""
+    path = str(tmp_path / "ckpt.json")
+    # cycle 1: saves init(1), gen1(2), gen2(3 -> torn)
+    plan1 = FaultPlan([FaultSpec(site="ckpt.save", kind="corrupt", at=(3,))])
+    _search(generations=2, faults=plan1).run_resumable(path)
+    lines = []
+    log = lambda *a: lines.append(" ".join(str(x) for x in a))  # noqa: E731
+    assert _search(generations=2, log=log).load_state(path).generation == 1
+    assert any("corrupt" in ln and ".prev" in ln for ln in lines)
+    # cycle 2: resume from the fallback cut and run to generation 3; the
+    # resumed run saves gen2(1), gen3(2 -> torn again)
+    plan2 = FaultPlan([FaultSpec(site="ckpt.save", kind="corrupt", at=(2,))])
+    _search(generations=3, faults=plan2).run_resumable(path)
+    with pytest.raises(json.JSONDecodeError):
+        json.load(open(path))                 # the final write really tore
+    lines2 = []
+    log2 = lambda *a: lines2.append(" ".join(str(x) for x in a))  # noqa: E731
+    restored = _search(generations=3, log=log2).load_state(path)
+    assert any("corrupt" in ln and ".prev" in ln for ln in lines2)
+    assert restored.generation == 2           # cycle 2's good rotation
+    # a third resume completes the search bit-identically
+    ref = _search(generations=3).run_resumable(str(tmp_path / "ref.json"))
+    final = _search(generations=3).run_resumable(path)
+    _assert_same_trajectory(ref, final)
+
+
 def test_graceful_preemption_resumes_bit_identically(tmp_path):
     """Injected SIGTERM at generation 2: run_resumable persists the last
     consistent state, re-raises, and a fresh process completes the search
@@ -296,6 +376,112 @@ def test_async_preemption_resumes_to_valid_front(tmp_path):
     objs = np.stack([c.objective_vector() for c in final.population])
     assert len(pareto_front(objs)) >= 1
     assert all(r.get("pipeline") == "async" for r in final.history)
+
+
+# ------------------------------------------------- router chaos (§14)
+
+
+def _serve_setup():
+    import jax
+    from repro.configs import reduced_config
+    from repro.models.registry import build_model
+    cfg = reduced_config("qwen2-0.5b")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+def test_router_chaos_parity_under_replica_loss_and_stall():
+    """THE acceptance drill (ISSUE 9): a seeded FaultPlan kills one replica
+    mid-decode (device_loss → quarantine + failover) and silently stalls
+    another (heartbeat → evict + restart).  Every admitted request must
+    come back bit-identical to the fault-free greedy reference; requests
+    shed at the bounded queue are explicitly rejected with counts
+    asserted; zero silent drops."""
+    from repro.serve import (EngineConfig, ReplicaRouter, RouterConfig,
+                             ServeRequest, greedy_reference)
+    cfg, bundle, params = _serve_setup()
+    rng = np.random.default_rng(0)
+    reqs = []
+    arrivals = [0.0, 0.0, 0.0, 0.0, 2.0, 3.0, 5.0, 8.0]
+    for i, arr in enumerate(arrivals):
+        reqs.append(ServeRequest(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, 4 + i % 5).astype(
+                np.int32),
+            max_new=4 + i % 4, arrival_s=arr))
+    refs = {r.rid: greedy_reference(bundle, params, r.prompt, r.max_new, 48)
+            for r in reqs}
+    plan = FaultPlan([
+        # kill replica 0 mid-decode: instant quarantine, in-flight work
+        # fails over to replica 1 and re-decodes from the prompt
+        FaultSpec(site="serve.replica", kind="device_loss",
+                  when=lambda c: c["replica"] == 0 and c["tick"] == 3),
+        # silently stall replica 1: only the decode-step heartbeat may
+        # notice (dispatch never sees the injected state)
+        FaultSpec(site="serve.replica", kind="stall", hang_s=6.0, times=1,
+                  when=lambda c: c["replica"] == 1 and c["tick"] == 5),
+    ], seed=0)
+    rcfg = RouterConfig(replicas=2, max_queue=3, heartbeat_misses=2,
+                        engine=EngineConfig(slots=2, cache_len=48, pad_to=4,
+                                            max_prefill_batch=2))
+    router = ReplicaRouter(bundle, params, rcfg, faults=plan)
+    done = router.run(list(reqs))
+    s = router.stats
+    # zero silent drops: every request back exactly once, admitted+shed=all
+    assert [r.rid for r in done] == list(range(len(reqs)))
+    assert s["admitted"] + s["shed_queue"] + s["shed_deadline"] == len(reqs)
+    # the burst of 4 over max_queue=3 shed one up front; losing half the
+    # capacity mid-run backs the queue up and sheds more — all explicit
+    shed = [r for r in done if r.rejected]
+    assert len(shed) == s["shed_queue"] >= 1
+    assert 3 not in {r.rid for r in done if not r.rejected}  # burst overflow
+    assert all(not r.out and not r.done for r in shed)
+    # both faults really fired
+    assert plan.fired("serve.replica", kind="device_loss")
+    assert plan.fired("serve.replica", kind="stall")
+    # the dead replica was quarantined (and stays dead); the stalled one
+    # was caught by the heartbeat, evicted and restarted
+    assert s["quarantined"] == [0]
+    assert not router.replicas[0].live and router.replicas[1].live
+    assert s["failovers"] >= 1 and s["restarts"] >= 1
+    # bit-identical parity for every admitted request: the fault-free
+    # greedy reference is the oracle (failover re-decodes from the prompt,
+    # greedy decode is deterministic, so partial work lost with replica 0
+    # is reproduced exactly on replica 1)
+    for r in done:
+        if r.rejected:
+            continue
+        assert not r.expired
+        assert r.out == refs[r.rid], r.rid
+
+
+def test_router_dispatch_fault_redispatches():
+    """A crash at the router.dispatch hand-off itself: the chosen replica
+    is failed and restarted, the request is requeued, and everything still
+    completes bit-identically."""
+    from repro.serve import (EngineConfig, ReplicaRouter, RouterConfig,
+                             ServeRequest, greedy_reference)
+    cfg, bundle, params = _serve_setup()
+    rng = np.random.default_rng(1)
+    reqs = [ServeRequest(rid=i,
+                         prompt=rng.integers(0, cfg.vocab_size, 5).astype(
+                             np.int32),
+                         max_new=4, arrival_s=0.0) for i in range(4)]
+    refs = {r.rid: greedy_reference(bundle, params, r.prompt, r.max_new, 48)
+            for r in reqs}
+    plan = FaultPlan([FaultSpec(site="router.dispatch", kind="crash",
+                                at=(1,))])
+    router = ReplicaRouter(bundle, params, RouterConfig(
+        replicas=2, engine=EngineConfig(slots=2, cache_len=48, pad_to=4,
+                                        max_prefill_batch=2)), faults=plan)
+    done = router.run(reqs)
+    assert len(done) == 4
+    for r in done:
+        assert not r.rejected and not r.expired
+        assert r.out == refs[r.rid]
+    assert plan.fired("router.dispatch", kind="crash")
+    assert router.stats["restarts"] == 1      # failed at hand-off, restarted
+    assert router.stats["quarantined"] == []  # one strike, not a streak
 
 
 def test_async_checkpoints_only_at_drain_barriers(tmp_path):

@@ -15,11 +15,15 @@ from repro.configs import reduced_config
 from repro.models.registry import build_model
 from repro.serve import (
     EngineConfig,
+    ReplicaRouter,
+    RouterConfig,
     ServeEngine,
     ServeRequest,
     build_buckets,
+    gamma_workload,
     greedy_reference,
     latency_stats,
+    onoff_workload,
     poisson_workload,
 )
 from repro.serve.buckets import pad_batch, pad_length
@@ -369,3 +373,245 @@ def test_serve_winner_raises_without_feasible(tiny_ecg):
                             constraints=Constraints(det_min=1.01))
     with pytest.raises(LookupError, match="no feasible candidate"):
         serve_winner(search, state, impossible, data_train=tr, data_val=va)
+
+
+# ------------------------------------------- engine replication hooks (§14)
+
+
+def test_engine_cancel_and_take_finished():
+    """The router-facing surface: cancel withdraws in-flight and queued
+    requests without recording a result; take_finished drains completions
+    incrementally; the load metrics track slot occupancy."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _requests(cfg, [(5, 8), (9, 6), (6, 10)])
+    refs = _refs(bundle, params, reqs)
+    engine = ServeEngine(bundle, params, EngineConfig(
+        slots=2, cache_len=CACHE_LEN, pad_to=1))
+    engine.reset()
+    for r in reqs:
+        engine.submit(r)
+    assert engine.has_work and engine.queue_depth == 3
+    engine._admit(0.0)                # rids 0,1 in flight; rid 2 queued
+    assert [r.rid for r in engine.in_flight] == [0, 1]
+    assert engine.queue_depth == 1
+    assert engine.cancel(2) is reqs[2]        # queued: leaves the queue
+    assert engine.cancel(1) is reqs[1]        # in flight: slot reclaimed
+    assert engine.cancel(99) is None          # unknown rid: no-op
+    assert [r.rid for r in engine.in_flight] == [0]
+    while engine.has_work:
+        engine.tick(float(engine.decode_steps))
+    got = engine.take_finished()
+    assert [r.rid for r in got] == [0] and got[0].out == refs[0]
+    assert engine.take_finished() == []       # drained: second take is empty
+    assert not engine.has_work
+
+
+# ------------------------------------------------- replica router (§14)
+
+
+def _router_requests(cfg, triples, seed=0):
+    """(prompt_len, max_new, arrival_s) triples."""
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(rid=i,
+                         prompt=rng.integers(0, cfg.vocab_size, pl).astype(
+                             np.int32),
+                         max_new=mn, arrival_s=arr)
+            for i, (pl, mn, arr) in enumerate(triples)]
+
+
+def test_router_greedy_parity_no_faults():
+    """Fault-free baseline: requests split across two replicas (open-loop
+    arrivals, mixed lengths) each decode bit-identically to the scalar
+    reference, and the router's accounting balances."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _router_requests(cfg, [(4, 6, 0.0), (8, 5, 0.0), (6, 4, 2.0),
+                                  (5, 7, 3.0), (7, 3, 5.0), (4, 6, 8.0)])
+    refs = _refs(bundle, params, reqs)
+    router = ReplicaRouter(bundle, params, RouterConfig(
+        replicas=2, engine=EngineConfig(slots=2, cache_len=CACHE_LEN,
+                                        pad_to=4, max_prefill_batch=2)))
+    done = router.run(reqs)
+    assert [r.rid for r in done] == list(range(6))
+    for r in done:
+        assert not r.rejected and not r.expired
+        assert r.out == refs[r.rid]
+    s = router.stats
+    assert s["admitted"] == s["completed"] == s["dispatches"] == 6
+    assert s["failovers"] == s["restarts"] == 0 and s["quarantined"] == []
+    # both replicas actually served work (least-loaded spreads the burst)
+    assert all(rep.engine.decode_steps > 0 for rep in router.replicas)
+
+
+def test_router_queue_shedding_is_explicit():
+    """A burst over the bounded router queue: overflow is bounced at
+    admission — flagged ``rejected``, returned unserved, counted — and
+    every admitted request still decodes bit-identically.  Zero silent
+    drops: submitted == served + shed."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _router_requests(cfg, [(4, 4, 0.0)] * 10, seed=1)
+    refs = _refs(bundle, params, reqs)
+    router = ReplicaRouter(bundle, params, RouterConfig(
+        replicas=1, max_queue=4,
+        engine=EngineConfig(slots=2, cache_len=CACHE_LEN, pad_to=4,
+                            max_prefill_batch=2)))
+    done = router.run(reqs)
+    assert len(done) == 10            # every request back exactly once
+    shed = [r for r in done if r.rejected]
+    served = [r for r in done if not r.rejected]
+    assert len(shed) == router.stats["shed_queue"] == 6
+    assert all(not r.out and not r.done for r in shed)
+    for r in served:
+        assert r.out == refs[r.rid]
+    assert router.stats["admitted"] == 4
+    assert router.stats["completed"] == len(served) == 4
+
+
+def test_router_deadline_shedding_rejects_unmeetable():
+    """Deadline-aware admission: once observed service times prove a
+    deadline unmeetable from the back of the queue, the request is bounced
+    up front instead of being admitted to die."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    # warmup (no deadlines) seeds the service-time estimate at ~3 virtual
+    # seconds; then a burst with 1s budgets — provably unmeetable for
+    # anything that has to queue
+    warm = _router_requests(cfg, [(4, 3, 0.0), (4, 3, 4.0), (4, 3, 8.0)],
+                            seed=2)
+    burst = _router_requests(cfg, [(4, 3, 20.0)] * 6, seed=3)
+    for i, r in enumerate(burst):
+        r.rid = 10 + i
+        r.deadline_s = 1.0
+    router = ReplicaRouter(bundle, params, RouterConfig(
+        replicas=1, engine=EngineConfig(slots=1, cache_len=CACHE_LEN,
+                                        pad_to=4, max_prefill_batch=1)))
+    done = router.run(warm + burst)
+    assert len(done) == 9             # zero silent drops
+    s = router.stats
+    assert s["shed_deadline"] == 5    # queue-empty head admitted, rest shed
+    shed = [r for r in done if r.rejected]
+    assert len(shed) == 5 and all(not r.out for r in shed)
+    # warmups completed; the one admitted burst request expired in flight
+    # (1s budget vs ~3s service) — expired, never silently dropped
+    assert s["completed"] == 3 and s["expired"] == 1
+
+
+def test_router_hedges_straggler_first_completion_wins():
+    """A silent stall with the heartbeat effectively off: the hedge path
+    alone must rescue the stuck requests — stragglers past the seeded
+    service-time percentile are twinned onto the healthy replica, the twin
+    wins, and the output is still bit-identical."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    from repro.core.faults import FaultPlan, FaultSpec
+    reqs = _router_requests(cfg, [(4, 4, float(i)) for i in range(20)],
+                            seed=4)
+    refs = _refs(bundle, params, reqs)
+    plan = FaultPlan([FaultSpec(site="serve.replica", kind="stall",
+                                hang_s=30.0, times=1,
+                                when=lambda c: c["replica"] == 0
+                                and c["tick"] == 12)])
+    router = ReplicaRouter(bundle, params, RouterConfig(
+        replicas=2, hedge=True, hedge_percentile=90.0, hedge_min_samples=4,
+        heartbeat_misses=50,          # heartbeat off: hedging must carry it
+        engine=EngineConfig(slots=2, cache_len=CACHE_LEN, pad_to=4,
+                            max_prefill_batch=2)), faults=plan)
+    done = router.run(reqs)
+    assert len(done) == 20
+    for r in done:
+        assert not r.rejected and not r.expired
+        assert r.out == refs[r.rid]
+    s = router.stats
+    assert s["hedges"] >= 1 and s["hedge_wins"] >= 1
+    assert s["quarantined"] == []     # nobody died — just a straggler
+
+
+def test_router_drain_completes_in_flight_only():
+    """Graceful shutdown across the replica set: drain() finishes the
+    dispatched requests bit-identically and leaves the undispatched queue
+    for the caller."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _router_requests(cfg, [(4, 5, 0.0)] * 8, seed=5)
+    refs = _refs(bundle, params, reqs)
+    router = ReplicaRouter(bundle, params, RouterConfig(
+        replicas=2, engine=EngineConfig(slots=2, cache_len=CACHE_LEN,
+                                        pad_to=4, max_prefill_batch=2)))
+    router.reset()
+    for r in reqs:
+        assert router.submit(r)
+    router._dispatch(0.0)             # 4 slots filled, 4 left queued
+    drained = router.drain()
+    assert {r.rid for r in drained} == {0, 1, 2, 3}
+    for r in drained:
+        assert not r.expired and r.out == refs[r.rid]
+    assert [r.rid for r in router.queue] == [4, 5, 6, 7]   # held
+
+
+# ------------------------------------------------ load generators (§14)
+
+
+def test_gamma_workload_deterministic_heavy_tail():
+    a = gamma_workload(64, vocab_size=64, rate_per_s=2.0, cv=4.0, seed=3)
+    b = gamma_workload(64, vocab_size=64, rate_per_s=2.0, cv=4.0, seed=3)
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt) and x.max_new == y.max_new
+               for x, y in zip(a, b))
+    arr = np.array([r.arrival_s for r in a])
+    assert (np.diff(arr) >= 0).all() and arr[-1] > 0
+    # heavy tail: the burstier stream has a larger max/median gap ratio
+    gaps_hi = np.diff([r.arrival_s for r in a])
+    gaps_lo = np.diff([r.arrival_s for r in gamma_workload(
+        64, vocab_size=64, rate_per_s=2.0, cv=1.0, seed=3)])
+    assert gaps_hi.max() > gaps_lo.max()
+    with pytest.raises(ValueError, match="rate_per_s"):
+        gamma_workload(4, vocab_size=64, rate_per_s=0.0)
+    with pytest.raises(ValueError, match="variation"):
+        gamma_workload(4, vocab_size=64, rate_per_s=1.0, cv=-1.0)
+
+
+def test_onoff_workload_bursts_inside_on_windows():
+    a = onoff_workload(40, vocab_size=64, rate_per_s=5.0, on_s=2.0,
+                       off_s=3.0, seed=9)
+    b = onoff_workload(40, vocab_size=64, rate_per_s=5.0, on_s=2.0,
+                       off_s=3.0, seed=9)
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+    arr = np.array([r.arrival_s for r in a])
+    assert (np.diff(arr) >= 0).all()
+    # every arrival lands strictly inside an on window of the 5s period
+    assert ((arr % 5.0) < 2.0).all()
+    with pytest.raises(ValueError, match="onoff"):
+        onoff_workload(4, vocab_size=64, rate_per_s=5.0, on_s=0.0, off_s=1.0)
+
+
+# ------------------------------------------------ replicated winner (§14)
+
+
+def test_replicated_winner_parity_and_failover(tiny_ecg):
+    """Replicated classification dispatch: round-robin replicas return the
+    same logits as the single winner; a replica that keeps crashing fails
+    over mid-call (same batch, same logits) and is quarantined — last-live
+    protection keeps the survivor."""
+    from repro.core.faults import FaultPlan, FaultSpec
+    from repro.core.genome import random_genome
+    from repro.serve import compile_winner, replicate_winner
+    (tr, va) = tiny_ecg
+    g = random_genome(np.random.default_rng(0))
+    winner = compile_winner(g, tr, va, train_steps=20, train_batch=32,
+                            seed=0, goal="test")
+    x = va[0][:10]
+    ref = winner.predict(x)
+
+    rw = replicate_winner(winner, 2)
+    assert np.array_equal(rw.predict(x), ref)
+    assert np.array_equal(rw.predict(x), ref)   # round-robins to replica 1
+    assert [r.batches_served for r in rw.replicas] == [1, 1]
+    assert rw.live_replicas == [0, 1]
+
+    plan = FaultPlan([FaultSpec(site="router.dispatch", kind="crash",
+                                when=lambda c: c["replica"] == 0)])
+    rw2 = replicate_winner(winner, 2, faults=plan)
+    for _ in range(8):
+        assert np.array_equal(rw2.predict(x), ref)  # failover: same logits
+    assert rw2.stats["failovers"] >= 1
+    assert rw2.stats["quarantined"] == [0]
+    assert rw2.live_replicas == [1]             # last live: never retired
+    assert "replicas=1/2" in rw2.report()
+    with pytest.raises(ValueError, match="at least one replica"):
+        replicate_winner(winner, 0)
