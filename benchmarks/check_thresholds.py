@@ -24,7 +24,16 @@ Gates BENCH_serve.json (benchmarks/serve_bench.py):
   end-to-end latency under open-loop Poisson load, as a multiple of the
   mean *unloaded* scalar latency.  A ratio, not a wall time — the bench
   shows ~3x; the generous ceiling only catches pathological queueing
-  (e.g. the engine degenerating to serial admission).
+  (e.g. the engine degenerating to serial admission);
+* paged KV cache (present when the bench ran its ``--paged`` section,
+  DESIGN.md §15): ``paged_parity_ok`` must be true (every admitted
+  request bit-identical to the scalar reference, OOM sheds explicit with
+  reference-prefix outputs, zero silent drops),
+  ``paged_concurrency_ratio >= --min-paged-concurrency`` (default 2.0,
+  the ISSUE's acceptance floor: paged peak concurrency vs dense at equal
+  KV memory on the long-tail mix), and
+  ``paged_p99_slowdown_vs_ideal <= --max-paged-p99-slowdown``
+  (default 20.0, same rationale as the dense ceiling).
 
 Gates BENCH_faults.json (benchmarks/fault_bench.py):
 
@@ -91,8 +100,9 @@ def check_pipeline(path: str, min_speedup: float) -> list:
     return failures
 
 
-def check_serve(path: str, min_speedup: float,
-                max_p99_slowdown: float) -> list:
+def check_serve(path: str, min_speedup: float, max_p99_slowdown: float,
+                min_paged_concurrency: float = 2.0,
+                max_paged_p99_slowdown: float = 20.0) -> list:
     with open(path) as f:
         payload = json.load(f)
     summary = payload.get("summary")
@@ -119,6 +129,35 @@ def check_serve(path: str, min_speedup: float,
           f"p99_slowdown={slowdown:.1f}x (ceiling {max_p99_slowdown:.1f}x) "
           f"p99={summary.get('p99_latency_ms', 0.0):.0f}ms "
           f"slots={summary.get('slots')}")
+    if "paged_concurrency_ratio" in summary:
+        if not summary.get("paged_parity_ok", False):
+            failures.append(
+                f"{path}: paged_parity_ok="
+                f"{summary.get('paged_parity_ok')} — a paged request "
+                f"diverged from the scalar reference, an OOM shed lost "
+                f"its prefix, or a request was dropped silently")
+        cratio = summary.get("paged_concurrency_ratio", 0.0)
+        if cratio < min_paged_concurrency:
+            failures.append(
+                f"{path}: paged_concurrency_ratio={cratio:.2f}x < floor "
+                f"{min_paged_concurrency:.2f}x — the paged pool is not "
+                f"buying admission capacity over dense slots at equal "
+                f"memory")
+        pslow = summary.get("paged_p99_slowdown_vs_ideal", float("inf"))
+        if pslow > max_paged_p99_slowdown:
+            failures.append(
+                f"{path}: paged_p99_slowdown_vs_ideal={pslow:.1f}x > "
+                f"ceiling {max_paged_p99_slowdown:.1f}x — pathological "
+                f"queueing through the paged engine")
+        print(f"[gate] {path} (paged): "
+              f"parity_ok={summary.get('paged_parity_ok')} "
+              f"concurrency_ratio={cratio:.2f}x "
+              f"(floor {min_paged_concurrency:.2f}x) "
+              f"p99_slowdown={pslow:.1f}x "
+              f"(ceiling {max_paged_p99_slowdown:.1f}x) "
+              f"shed_blocks={summary.get('paged_shed_blocks')} "
+              f"peak={summary.get('paged_peak_concurrency')}/"
+              f"dense {summary.get('dense_peak_concurrency')}")
     return failures
 
 
@@ -191,7 +230,8 @@ def check_router(path: str, min_goodput: float) -> list:
 # The router ratios run on the virtual clock and are exactly deterministic.
 BASELINE_METRICS = {
     "pipeline": [("speedup_async", True)],
-    "serve": [("speedup_vs_wave", True)],
+    "serve": [("speedup_vs_wave", True),
+              ("paged_concurrency_ratio", True)],
     "faults": [],
     "router": [("goodput_ratio_replica_loss", True),
                ("goodput_ratio_overload_vs_single", True),
@@ -204,7 +244,9 @@ def check_against_baseline(path: str, baseline_dir: str,
     """Compare one bench json's ratio metrics against the committed
     baseline copy of the same file.  A missing baseline file is a skip
     (new bench), not a failure; a missing metric in the baseline is
-    skipped too (metric added since the baseline was cut)."""
+    skipped too (metric added since the baseline was cut).  The reverse —
+    a metric the baseline has but the run lacks — is a failure: it means
+    a bench section was silently disabled."""
     base_path = os.path.join(baseline_dir, os.path.basename(path))
     if not os.path.exists(base_path):
         print(f"[gate] {path}: no baseline at {base_path} — skipped")
@@ -218,7 +260,16 @@ def check_against_baseline(path: str, baseline_dir: str,
     failures = []
     tol = max_regression_pct / 100.0
     for metric, higher_better in BASELINE_METRICS.get(bench, []):
-        if metric not in summary or metric not in base:
+        if metric not in base:
+            continue  # metric added since the baseline was cut
+        if metric not in summary:
+            # the baseline expects this ratio but the run never produced
+            # it — a silently-disabled bench section must read as red, not
+            # as a skip
+            failures.append(f"{path}: {metric} in baseline but missing "
+                            f"from this run (bench section disabled?)")
+            print(f"[gate] {path} vs baseline: {metric} MISSING "
+                  f"(baseline {float(base[metric]):.3f}) FAIL")
             continue
         now, ref = float(summary[metric]), float(base[metric])
         if ref == 0.0:
@@ -265,6 +316,12 @@ def main() -> None:
     ap.add_argument("--max-p99-slowdown", type=float, default=20.0,
                     help="p99 Poisson latency ceiling as a multiple of "
                          "the unloaded scalar latency (default 20.0)")
+    ap.add_argument("--min-paged-concurrency", type=float, default=2.0,
+                    help="paged peak-concurrency floor vs dense at equal "
+                         "KV memory (default 2.0, the acceptance floor)")
+    ap.add_argument("--max-paged-p99-slowdown", type=float, default=20.0,
+                    help="paged open-loop p99 ceiling as a multiple of "
+                         "the unloaded scalar latency (default 20.0)")
     ap.add_argument("--max-fault-slowdown", type=float, default=5.0,
                     help="wall-time ceiling of the crash-and-recover run "
                          "as a multiple of the fault-free run "
@@ -283,7 +340,9 @@ def main() -> None:
     failures = check_pipeline(args.pipeline_json, args.min_speedup)
     if args.serve_json:
         failures += check_serve(args.serve_json, args.min_serve_speedup,
-                                args.max_p99_slowdown)
+                                args.max_p99_slowdown,
+                                args.min_paged_concurrency,
+                                args.max_paged_p99_slowdown)
     if args.faults_json:
         failures += check_faults(args.faults_json, args.max_fault_slowdown)
     if args.router_json:

@@ -1,9 +1,17 @@
 """Kernel micro-benchmarks: wall time of the jnp reference paths on CPU
 (the Pallas kernels target TPU; interpret mode timing is meaningless) plus
 the analytic VMEM/MXU utilization of the kernels' BlockSpec tiling.
+
+``--json`` (or ``benchmarks/run.py --json``) writes the rows to
+BENCH_kernels.json for perf-trajectory tracking; there is no gate summary
+— kernel wall times are absolute and machine-dependent, so the CI gate
+only checks the file exists and parses.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 from typing import Callable, Dict, List
 
@@ -61,6 +69,28 @@ def run(log=print) -> List[Dict]:
     rows.append({"name": "ssd_chunked_2k", "us_per_call": us,
                  "derived": f"chunk=256"})
 
+    # paged decode attention (DESIGN.md §15): dense-gather reference vs the
+    # chunked fast path over a block-table pool — B=16 single-token rows,
+    # mixed kv_len, 8-token blocks (the serve bench's paged geometry)
+    from repro.kernels.decode_attention.ops import (
+        paged_decode_attention)
+    B, NB, BS, KVH, HD, REP = 16, 8, 8, 2, 64, 4
+    P = B * NB
+    qp = jnp.asarray(rng.normal(size=(B, KVH * REP, HD)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, BS, KVH, HD)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, BS, KVH, HD)), jnp.float32)
+    tbl = jnp.asarray(
+        rng.permutation(P)[:B * NB].reshape(B, NB), jnp.int32)
+    kvl = jnp.asarray(rng.integers(1, NB * BS, (B,)), jnp.int32)
+    for impl in ("ref", "chunked"):
+        f = jax.jit(lambda q_, k_, v_, t_, l_, impl=impl:
+                    paged_decode_attention(q_, k_, v_, t_, l_, impl=impl))
+        us = _time(f, qp, kp, vp, tbl, kvl)
+        fl = 4 * B * NB * BS * KVH * REP * HD
+        rows.append({"name": f"paged_decode_{impl}_b{B}", "us_per_call": us,
+                     "derived": f"{fl/us*1e-6:.2f}GFLOP/s "
+                                f"blocks={NB}x{BS}"})
+
     # MoE grouped matmul reference
     from repro.kernels.moe_gmm.ref import gmm_ref
     xe = jnp.asarray(rng.normal(size=(8, 128, 256)), jnp.bfloat16)
@@ -87,3 +117,28 @@ def run(log=print) -> List[Dict]:
                      "us_per_call": 0.0,
                      "derived": f"{bytes_/2**20:.2f}MiB of 16MiB VMEM"})
     return rows
+
+
+def write_json(rows: List[Dict], path: str) -> None:
+    """Rows only — kernel wall times are absolute (machine-dependent), so
+    there is no gate summary; the json exists for trajectory tracking."""
+    with open(path, "w") as f:
+        json.dump({"bench": "kernels", "rows": rows}, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows as JSON (e.g. BENCH_kernels.json)")
+    args = ap.parse_args()
+    rows = run(log=lambda *a: print(*a, file=sys.stderr))
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
+    if args.json:
+        write_json(rows, args.json)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

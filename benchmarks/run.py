@@ -61,7 +61,11 @@ def main() -> None:
         serve_bench,
         train_bench,
     )
-    rows += kernel_bench.run(log=lambda *a: print(*a, file=sys.stderr))
+    kernel_rows = kernel_bench.run(log=lambda *a: print(*a, file=sys.stderr))
+    rows += kernel_rows
+    if args.json:
+        kernel_bench.write_json(kernel_rows, "BENCH_kernels.json")
+        print("# wrote BENCH_kernels.json", file=sys.stderr)
     rows += population_eval_bench.run(
         log=lambda *a: print(*a, file=sys.stderr))
     multi_platform_rows = multi_platform_bench.run(

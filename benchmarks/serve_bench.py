@@ -21,6 +21,17 @@ both servers must match the scalar reference bit for bit, engine tok/s ≥
 3x the wave baseline, and the Poisson p99 latency must stay within a
 bounded multiple of the unloaded ideal (a relative threshold — absolute
 times vary across runners, ratios don't).
+
+The ``--paged`` section (on by default) benchmarks the paged KV cache
+(DESIGN.md §15) at *equal KV memory*: a dense engine with
+``DENSE_SLOTS`` worst-case slots vs a paged engine whose block pool
+holds exactly the same number of cache tokens
+(``DENSE_SLOTS * CACHE_LEN / PAGED_BLOCK`` blocks) but admits on actual
+block demand.  On a long-tail prompt-length burst the paged engine must
+reach ≥ 2x the dense peak concurrency (the admission-capacity gate),
+with every admitted request bit-identical to the scalar reference and
+every OOM shed explicit (``shed_blocks``), plus a bounded p99 under
+open-loop long-tail load.
 """
 from __future__ import annotations
 
@@ -42,6 +53,7 @@ from repro.serve import (
     ServeRequest,
     greedy_reference,
     latency_stats,
+    longtail_workload,
     poisson_workload,
 )
 
@@ -51,15 +63,141 @@ WAVE_SLOTS = 4          # the shipped BatchedServer default — the baseline
 PROMPT_LENS = (4, 8, 12, 16, 24)
 OUT_LENS = (4, 8, 12, 16, 24)
 
+# paged-vs-dense comparison at equal KV memory (DESIGN.md §15): the dense
+# engine reserves DENSE_SLOTS * CACHE_LEN cache tokens up front; the paged
+# pool holds exactly as many tokens in PAGED_BLOCK-sized blocks but can
+# spread them over up to PAGED_SLOTS concurrent sequences
+DENSE_SLOTS = 4
+PAGED_BLOCK = 8
+PAGED_SLOTS = 16
+PAGED_BLOCKS = DENSE_SLOTS * CACHE_LEN // PAGED_BLOCK   # same token count
+
 
 def _fresh(reqs: List[ServeRequest]) -> List[ServeRequest]:
     return [ServeRequest(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
                          arrival_s=r.arrival_s) for r in reqs]
 
 
+def _run_paged(bundle, params, cfg, dec, log, n_requests: int,
+               rate_per_s: float, seed: int) -> Tuple[List[Dict], Dict]:
+    """Paged-vs-dense admission capacity at equal KV memory on a
+    long-tail prompt-length mix (the workload dense worst-case slots are
+    worst at).  Returns extra rows + summary keys (``paged_*``)."""
+    lt = longtail_workload(n_requests, vocab_size=cfg.vocab_size,
+                           rate_per_s=0.0, median_prompt=6, sigma=0.8,
+                           max_prompt=CACHE_LEN - 16,
+                           out_lens=(4, 8, 12, 16), seed=seed + 1)
+    log(f"[serve] paged workload: {n_requests} long-tail requests, "
+        f"prompts {min(len(r.prompt) for r in lt)}-"
+        f"{max(len(r.prompt) for r in lt)}")
+
+    # scalar reference: parity oracle + unloaded ideal for this mix
+    for r in lt:   # warm the per-prompt-length prefill compiles
+        greedy_reference(bundle, params, r.prompt, 1, CACHE_LEN,
+                         decode_jit=dec)
+    ref: Dict[int, List[int]] = {}
+    ideal: List[float] = []
+    for r in lt:
+        t = time.perf_counter()
+        ref[r.rid] = greedy_reference(bundle, params, r.prompt, r.max_new,
+                                      CACHE_LEN, decode_jit=dec)
+        ideal.append(time.perf_counter() - t)
+    ideal_mean = float(np.mean(ideal))
+
+    # dense engine at the equal-memory slot count
+    dense = ServeEngine(bundle, params, EngineConfig(
+        slots=DENSE_SLOTS, cache_len=CACHE_LEN, pad_to=8,
+        max_prefill_batch=8))
+    dense.run(_fresh(lt))              # warm
+    t0 = time.perf_counter()
+    dense_done = dense.run(_fresh(lt))
+    t_dense = time.perf_counter() - t0
+    dense_stats = dense.stats()
+    dense_tokens = sum(len(r.out) for r in dense_done)
+    dense_parity = all(r.out == ref[r.rid] for r in dense_done)
+    log(f"[serve] dense equal-mem ({DENSE_SLOTS} slots x {CACHE_LEN}): "
+        f"{dense_tokens / t_dense:.1f} tok/s, "
+        f"peak_concurrency={dense_stats['peak_concurrency']}, "
+        f"parity={dense_parity}")
+
+    # paged engine: same cache tokens, block-granular admission
+    paged = ServeEngine(bundle, params, EngineConfig(
+        slots=PAGED_SLOTS, cache_len=CACHE_LEN, pad_to=8,
+        max_prefill_batch=8, paged=True, block_size=PAGED_BLOCK,
+        n_blocks=PAGED_BLOCKS))
+    paged.run(_fresh(lt))              # warm
+    t0 = time.perf_counter()
+    paged_done = paged.run(_fresh(lt))
+    t_paged = time.perf_counter() - t0
+    paged_stats = paged.stats()
+    paged_tokens = sum(len(r.out) for r in paged_done)
+    served = [r for r in paged_done if not r.oom]
+    # every request comes back exactly once (zero silent drops); OOM sheds
+    # are explicit and their prefix must still match the reference
+    paged_parity = (len(paged_done) == len(lt)
+                    and all(r.out == ref[r.rid] for r in served)
+                    and all(r.out == ref[r.rid][:len(r.out)]
+                            for r in paged_done if r.oom))
+    ratio = (paged_stats["peak_concurrency"]
+             / max(dense_stats["peak_concurrency"], 1))
+    log(f"[serve] paged ({PAGED_BLOCKS} blocks x {PAGED_BLOCK}, "
+        f"{PAGED_SLOTS} slots): {paged_tokens / t_paged:.1f} tok/s, "
+        f"peak_concurrency={paged_stats['peak_concurrency']} "
+        f"({ratio:.2f}x dense), shed_blocks={paged_stats['shed_blocks']}, "
+        f"peak_blocks={paged_stats['peak_blocks_used']}/{PAGED_BLOCKS}, "
+        f"parity={paged_parity}")
+
+    # open-loop long-tail latency through the paged engine
+    lt_open = longtail_workload(n_requests, vocab_size=cfg.vocab_size,
+                                rate_per_s=rate_per_s, median_prompt=6,
+                                sigma=0.8, max_prompt=CACHE_LEN - 16,
+                                out_lens=(4, 8, 12, 16), seed=seed + 1)
+    open_done = paged.run(_fresh(lt_open), realtime=True)
+    ostats = latency_stats([r for r in open_done if not r.oom],
+                           makespan_s=max(r.t_done for r in open_done))
+    p99_slowdown = ostats["p99_latency_s"] / ideal_mean if ideal_mean \
+        else 0.0
+    log(f"[serve] paged open-loop (rate={rate_per_s}/s): "
+        f"p50={ostats['p50_latency_s'] * 1e3:.1f}ms "
+        f"p99={ostats['p99_latency_s'] * 1e3:.1f}ms "
+        f"({p99_slowdown:.1f}x unloaded ideal)")
+
+    rows = [
+        {"name": f"serve_dense_equalmem_{DENSE_SLOTS}slots",
+         "us_per_call": t_dense * 1e6 / max(dense_tokens, 1),
+         "derived": f"tok_per_s={dense_tokens / t_dense:.1f} "
+                    f"peak_concurrency={dense_stats['peak_concurrency']} "
+                    f"parity={dense_parity}"},
+        {"name": f"serve_paged_{PAGED_BLOCKS}blocks",
+         "us_per_call": t_paged * 1e6 / max(paged_tokens, 1),
+         "derived": f"tok_per_s={paged_tokens / t_paged:.1f} "
+                    f"peak_concurrency={paged_stats['peak_concurrency']} "
+                    f"ratio={ratio:.2f}x "
+                    f"shed_blocks={paged_stats['shed_blocks']} "
+                    f"parity={paged_parity}"},
+        {"name": "serve_paged_longtail_open",
+         "us_per_call": ostats["p99_latency_s"] * 1e6,
+         "derived": f"p50_ms={ostats['p50_latency_s'] * 1e3:.1f} "
+                    f"p99_ms={ostats['p99_latency_s'] * 1e3:.1f} "
+                    f"p99_slowdown={p99_slowdown:.1f}x"},
+    ]
+    summary = {
+        "paged_parity_ok": bool(paged_parity and dense_parity),
+        "paged_concurrency_ratio": float(ratio),
+        "paged_peak_concurrency": int(paged_stats["peak_concurrency"]),
+        "dense_peak_concurrency": int(dense_stats["peak_concurrency"]),
+        "paged_shed_blocks": int(paged_stats["shed_blocks"]),
+        "paged_peak_blocks_used": int(paged_stats["peak_blocks_used"]),
+        "paged_p99_slowdown_vs_ideal": float(p99_slowdown),
+        "paged_block_size": PAGED_BLOCK,
+        "paged_n_blocks": PAGED_BLOCKS,
+    }
+    return rows, summary
+
+
 def run(log=print, smoke: bool = True, n_requests: int = 32,
         slots: int = 32, rate_per_s: float = 60.0,
-        seed: int = 0) -> Tuple[List[Dict], Dict]:
+        seed: int = 0, paged: bool = True) -> Tuple[List[Dict], Dict]:
     cfg = reduced_config(ARCH)
     bundle = build_model(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
@@ -167,6 +305,11 @@ def run(log=print, smoke: bool = True, n_requests: int = 32,
         "slots": slots,
         "rate_per_s": rate_per_s,
     }
+    if paged:
+        prow, psum = _run_paged(bundle, params, cfg, dec, log, n_requests,
+                                rate_per_s, seed)
+        rows += prow
+        summary.update(psum)
     return rows, summary
 
 
@@ -189,11 +332,14 @@ def main() -> None:
                     help="Poisson arrival rate for the latency run")
     ap.add_argument("--json", metavar="PATH",
                     help="write rows + gate summary as JSON")
+    ap.add_argument("--no-paged", dest="paged", action="store_false",
+                    help="skip the paged-vs-dense equal-memory section")
     args = ap.parse_args()
     n = args.requests or (64 if args.full else 32)
     log = lambda *a: print(*a, file=sys.stderr)  # noqa: E731
     rows, summary = run(log=log, smoke=not args.full, n_requests=n,
-                        slots=args.slots, rate_per_s=args.rate)
+                        slots=args.slots, rate_per_s=args.rate,
+                        paged=args.paged)
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"")
     if args.json:

@@ -75,6 +75,15 @@ def main():
     # handful of compiled executables.  The full closed loop — winner
     # *trained to convergence* before compiling — is
     # examples/serve_winner.py.
+    #
+    # Token-level LM serving has a paged KV cache (DESIGN.md §15):
+    # serve_winner(..., paged=True) records the preference on the handle
+    # (the classifier forward itself is cache-free) and
+    # launch/serve.py --engine --paged builds EngineConfig(paged=True) —
+    # admission on free pool *blocks* rather than worst-case dense
+    # slots, ~4x concurrency at equal memory on long-tail prompts.
+    # Prefer dense slots (the default) when prompts uniformly fill
+    # cache_len or an admitted request must never be OOM-shed.
     print("\n== serving batched requests through the compiled forward ==")
     from repro.core.trainer import forward
     from repro.serve import ServableWinner

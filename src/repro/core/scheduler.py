@@ -156,11 +156,17 @@ class SchedulerRun:
         if self._n == 0:
             return
         self._alive = n_workers
+        # Register every worker's device BEFORE starting any thread: an
+        # eagerly-scheduled first worker can fail (even DeviceLost) while
+        # later workers are still being spawned, and the quarantine logic
+        # must see the full device set or it mistakes the failing device
+        # for the last live one and refuses to retire it.
         for w in range(n_workers):
-            dev = self._devices[w % len(self._devices)] \
+            self._alive_devices[w] = self._devices[w % len(self._devices)] \
                 if self._devices else None
-            self._alive_devices[w] = dev
-            threading.Thread(target=self._worker, args=(w, dev),
+        for w in range(n_workers):
+            threading.Thread(target=self._worker,
+                             args=(w, self._alive_devices[w]),
                              daemon=True, name=f"sched-worker-{w}").start()
         if speculate:
             threading.Thread(target=self._watcher, daemon=True,

@@ -110,3 +110,70 @@ def decode_attention_pallas(
         interpret=interpret,
     )(kv_len.astype(jnp.int32), qg, kt, vt)
     return out.reshape(b, h, hd)
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, bk: int, n_kv: int):
+    # The block table is consumed entirely inside the BlockSpec index maps
+    # (scalar prefetch steers which pool page lands in VMEM); the online-
+    # softmax body is identical to the dense kernel's.
+    del tbl_ref
+    _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            bk=bk, n_kv=n_kv)
+
+
+def paged_decode_attention_pallas(
+    q: jnp.ndarray,        # (B, H, hd)
+    k_pages: jnp.ndarray,  # (P, BS, KVH, hd) global block pool
+    v_pages: jnp.ndarray,
+    tables: jnp.ndarray,   # (B, NB) int32 per-row block tables
+    kv_len: jnp.ndarray,   # (B,) int32 valid logical prefix
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Paged decode attention: gather K/V pages via block tables.
+
+    Both the table and the lengths ride as scalar-prefetch operands, so
+    the K/V BlockSpec index map reads ``tables[b, j]`` to pull the j-th
+    logical block of row ``b`` straight from the pool — no host gather,
+    no per-row dense cache.  Unallocated table entries (sentinel >= P)
+    are clamped to a valid page and masked by ``kv_len`` (positions past
+    the valid prefix score ``NEG_INF`` exactly as in the dense kernel);
+    fully-invalid logical blocks are skipped via ``pl.when``.
+    """
+    b, h, hd = q.shape
+    n_pages, bs, kvh = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    nb = tables.shape[1]
+    rep = h // kvh
+
+    qg = q.reshape(b, kvh, rep, hd)
+    kt = k_pages.swapaxes(1, 2)    # (P, KVH, BS, hd)
+    vt = v_pages.swapaxes(1, 2)
+    tbl = jnp.minimum(tables, n_pages - 1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd),
+                         lambda b_, g_, j, tbl, lens: (b_, g_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd),
+                         lambda b_, g_, j, tbl, lens: (tbl[b_, j], g_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd),
+                         lambda b_, g_, j, tbl, lens: (tbl[b_, j], g_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda b_, g_, j, tbl, lens: (b_, g_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, bk=bs, n_kv=nb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, kv_len.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(b, h, hd)

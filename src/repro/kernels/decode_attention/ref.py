@@ -20,3 +20,33 @@ def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgrs,bsgd->bgrd", p, v.astype(jnp.float32))
     return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def gather_paged_kv(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                    tables: jnp.ndarray):
+    """Materialize each row's logical cache from the block pool.
+
+    k/v_pages: (P, BS, KVH, hd) global pools; tables: (B, NB) int32 block
+    tables (entries >= P are unallocated sentinels — clamped, then masked
+    by ``kv_len`` downstream).  Returns dense (B, NB*BS, KVH, hd) views.
+    """
+    p, bs, kvh, hd = k_pages.shape
+    b, nb = tables.shape
+    tbl = jnp.minimum(tables, p - 1)
+    k = k_pages[tbl].reshape(b, nb * bs, kvh, hd)
+    v = v_pages[tbl].reshape(b, nb * bs, kvh, hd)
+    return k, v
+
+
+def paged_decode_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                               v_pages: jnp.ndarray, tables: jnp.ndarray,
+                               kv_len: jnp.ndarray) -> jnp.ndarray:
+    """Dense-gather oracle for paged decode attention.
+
+    q: (B, H, hd); k/v_pages: (P, BS, KVH, hd); tables: (B, NB);
+    kv_len: (B,) valid logical prefix.  Gathers each row's blocks into a
+    contiguous cache and runs :func:`decode_attention_ref` — the parity
+    anchor for both the paged Pallas kernel and the chunked fast path.
+    """
+    k, v = gather_paged_kv(k_pages, v_pages, tables)
+    return decode_attention_ref(q, k, v, kv_len)

@@ -20,6 +20,11 @@ checks, failover, load shedding and hedging — DESIGN.md §14):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
       --requests 12 --max-new 16 --router --replicas 2
+
+Both the engine and the router take ``--paged`` (with ``--block-size``/
+``--blocks``) to admit on free KV-cache pool blocks instead of
+worst-case dense slots (DESIGN.md §15) — the capacity win on long-tail
+prompt mixes.
 """
 from __future__ import annotations
 
@@ -142,7 +147,19 @@ def main(argv=None) -> None:
     ap.add_argument("--replicas", type=int, default=2,
                     help="replica count for --router (device-affine across "
                          "jax.devices() when more than one is present)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: admit on free pool blocks instead "
+                         "of worst-case dense slots (DESIGN.md §15); applies "
+                         "to --engine and --router")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV-cache block for --paged")
+    ap.add_argument("--blocks", type=int, default=None,
+                    help="pool size in blocks for --paged (default: worst "
+                         "case, slots * cache_len / block_size)")
     args = ap.parse_args(argv)
+    if args.paged and not (args.engine or args.router):
+        ap.error("--paged needs --engine or --router (the wave-barrier "
+                 "baseline is dense-only)")
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     bundle = build_model(cfg)
@@ -154,21 +171,22 @@ def main(argv=None) -> None:
                          max_new=args.max_new)
             for i in range(args.requests)]
     t0 = time.time()
+    ecfg = EngineConfig(slots=args.slots, cache_len=64,
+                        pad_to=8 if bundle.prefill_pads else 1,
+                        paged=args.paged, block_size=args.block_size,
+                        n_blocks=args.blocks)
     if args.router:
         from repro.serve.router import ReplicaRouter, RouterConfig
         devices = jax.devices()
         router = ReplicaRouter(bundle, params, RouterConfig(
-            replicas=args.replicas,
-            engine=EngineConfig(slots=args.slots, cache_len=64,
-                                pad_to=8 if bundle.prefill_pads else 1)),
+            replicas=args.replicas, engine=ecfg),
             devices=devices if len(devices) > 1 else None)
         done = router.run(reqs)
         print(f"router stats: {router.stats}")
     elif args.engine:
-        engine = ServeEngine(bundle, params, EngineConfig(
-            slots=args.slots, cache_len=64,
-            pad_to=8 if bundle.prefill_pads else 1))
+        engine = ServeEngine(bundle, params, ecfg)
         done = engine.run(reqs)
+        print(f"engine stats: {engine.stats()}")
     else:
         server = BatchedServer(bundle, params, slots=args.slots,
                                cache_len=64)

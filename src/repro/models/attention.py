@@ -292,6 +292,7 @@ def attention_decode_slotted(
     lens: jnp.ndarray,              # (B,) int32: per-slot current lengths
     cfg: ModelConfig,
     use_rope: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """One decode step with independent per-slot sequence lengths.
 
@@ -301,8 +302,9 @@ def attention_decode_slotted(
     than a neighbour), and attention masks each row to its own valid prefix.
     On TPU the masked contraction is the Pallas decode-attention kernel
     (kernels/decode_attention — per-row ``kv_len`` is a scalar-prefetch
-    operand there); elsewhere it is the same jnp fast path the scalar decode
-    uses, so batch rows are bit-identical to a one-request decode.
+    operand there; ``interpret=None`` auto-selects the compiled kernel);
+    elsewhere it is the same jnp fast path the scalar decode uses, so batch
+    rows are bit-identical to a one-request decode.
 
     Returns (out, k_cache, v_cache).
     """
@@ -323,12 +325,73 @@ def attention_decode_slotted(
     if jax.default_backend() == "tpu":
         from repro.kernels.decode_attention.ops import decode_attention
         out = decode_attention(q[:, 0], k_cache, v_cache, kv_len,
-                               interpret=False)[:, None]
+                               interpret=interpret)[:, None]
     else:
         out = chunked_attention(q, k_cache, v_cache, causal=False,
                                 chunk=cfg.attn_chunk, kv_len=kv_len)
     y = out.reshape(b, 1, -1) @ p["o"].astype(x.dtype)
     return y, k_cache, v_cache
+
+
+def attention_decode_paged(
+    p: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                 # (B, 1, D)
+    k_pool: jnp.ndarray,            # (P, BS, KVH, hd) global block pool
+    v_pool: jnp.ndarray,
+    lens: jnp.ndarray,              # (B,) int32: per-slot current lengths
+    tables: jnp.ndarray,            # (B, NB) int32 block tables
+    active: jnp.ndarray,            # (B,) bool: rows holding live requests
+    cfg: ModelConfig,
+    use_rope: bool = True,
+    interpret: Optional[bool] = None,
+):
+    """One decode step against a paged (block-pool) KV cache.
+
+    Identical per-row arithmetic to :func:`attention_decode_slotted`, but
+    K/V live in a global pool of fixed-size blocks addressed through each
+    slot's block table.  The new KV row is scattered at the block/offset
+    of logical position ``lens[b]``; the write is *dropped* for inactive
+    rows (``mode="drop"`` via the sentinel block index) — a freed block
+    may already belong to another slot, so unlike the dense path an
+    inactive row must not touch the pool at all.
+
+    Off-TPU the contraction gathers each row's blocks into a contiguous
+    ``(B, NB*BS, KVH, hd)`` view and reuses the exact sq==1 jnp fast path
+    — when ``NB*BS`` equals the dense engine's ``cache_len``, the result
+    is bit-identical to the dense slotted decode (same shapes, same
+    reduction order; invalid positions mask to exact zeros).  On TPU the
+    paged Pallas kernel consumes the table directly via scalar prefetch.
+
+    Returns (out, k_pool, v_pool).
+    """
+    b = x.shape[0]
+    n_blocks, bs = k_pool.shape[0], k_pool.shape[1]
+    span = tables.shape[1] * bs
+    q, k, v = _project_qkv(p, x, cfg)
+    if use_rope:
+        if cfg.mrope:
+            positions = jnp.broadcast_to(lens[None, :, None], (3, b, 1))
+        else:
+            positions = lens[:, None]
+        q, k = _rotate(q, k, positions, cfg)
+    pos_w = jnp.minimum(lens, span - 1)
+    blk = jnp.take_along_axis(tables, (pos_w // bs)[:, None], axis=1)[:, 0]
+    blk = jnp.where(active, blk, n_blocks)      # inactive rows: dropped
+    off = pos_w % bs
+    k_pool = k_pool.at[blk, off].set(k[:, 0], mode="drop")
+    v_pool = v_pool.at[blk, off].set(v[:, 0], mode="drop")
+    kv_len = lens + 1
+    if jax.default_backend() == "tpu":
+        from repro.kernels.decode_attention.ops import paged_decode_attention
+        out = paged_decode_attention(q[:, 0], k_pool, v_pool, tables,
+                                     kv_len, interpret=interpret)[:, None]
+    else:
+        from repro.kernels.decode_attention.ref import gather_paged_kv
+        kd, vd = gather_paged_kv(k_pool, v_pool, tables)
+        out = chunked_attention(q, kd, vd, causal=False,
+                                chunk=cfg.attn_chunk, kv_len=kv_len)
+    y = out.reshape(b, 1, -1) @ p["o"].astype(x.dtype)
+    return y, k_pool, v_pool
 
 
 def cross_attention_block(p, x, enc_out, cfg: ModelConfig) -> jnp.ndarray:

@@ -23,6 +23,7 @@ from repro.distributed.sharding import logical_constraint
 from repro.models.attention import (
     attention_block,
     attention_decode,
+    attention_decode_paged,
     attention_decode_slotted,
     attention_prefill,
     attention_specs,
@@ -271,6 +272,101 @@ def hybrid_decode_step_slotted(params, cache, tokens, active,
             h = apply_norm(cfg.norm, x_, shared["attn_norm"], cfg.norm_eps)
             a, kc, vc = attention_decode_slotted(shared["attn"], h, kc, vc,
                                                  lens, cfg)
+            x_ = x_ + a
+            x_ = x_ + mlp_block(shared["mlp"],
+                                apply_norm(cfg.norm, x_, shared["mlp_norm"],
+                                           cfg.norm_eps), cfg)
+            return x_, (conv_new, ssm_new, kc, vc)
+
+        x, (conv_g, ssm_g, k_all, v_all) = jax.lax.scan(
+            group_step, x,
+            (params["groups"], cache["conv"], cache["ssm"],
+             cache["k"], cache["v"]))
+        new_cache.update({"conv": conv_g, "ssm": ssm_g,
+                          "k": k_all, "v": v_all})
+    conv_t, ssm_t = cache["conv_tail"], cache["ssm_tail"]
+    if "tail" in params:
+        x, (conv_t, ssm_t) = jax.lax.scan(
+            mamba_step, x, (params["tail"], conv_t, ssm_t))
+    x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["unembed"].astype(x.dtype))[:, 0]
+    new_cache.update({"conv_tail": conv_t, "ssm_tail": ssm_t})
+    return logits, new_cache
+
+
+def init_hybrid_paged_cache(cfg: ModelConfig, slots: int, cache_len: int,
+                            n_blocks: int, block_size: int):
+    """Paged hybrid cache: only the shared block's KV moves into a global
+    block pool (per layer group); conv/SSM states are O(1) per slot and
+    stay dense per-row."""
+    assert cache_len % block_size == 0, \
+        "cache_len must be a block_size multiple"
+    n_groups, _, _ = _layout(cfg)
+    cache = init_hybrid_slot_cache(cfg, slots, cache_len)
+    cache["tables"] = jnp.full((slots, cache_len // block_size), n_blocks,
+                               jnp.int32)
+    if n_groups:
+        dt = jnp.dtype(cfg.dtype)
+        kv = (n_groups, n_blocks, block_size, cfg.n_kv_heads,
+              cfg.resolved_head_dim)
+        cache["k"] = jnp.zeros(kv, dt)
+        cache["v"] = jnp.zeros(kv, dt)
+    return cache
+
+
+def hybrid_paged_cache_specs(cfg: ModelConfig):
+    n_groups, _, _ = _layout(cfg)
+    specs = {
+        "conv_tail": ("layers", "batch", None, "heads"),
+        "ssm_tail": ("layers", "batch", "heads", None, None),
+        "lens": ("batch",),
+        "tables": ("batch", None),
+    }
+    if n_groups:
+        kv = ("layer_groups", "blocks", "block", "kv_heads", "head_dim")
+        specs.update({
+            "conv": ("layer_groups", "layers", "batch", None, "heads"),
+            "ssm": ("layer_groups", "layers", "batch", "heads", None, None),
+            "k": kv,
+            "v": kv,
+        })
+    return specs
+
+
+def hybrid_prefill_paged(params, cfg: ModelConfig, *, tokens, lens):
+    """Exact-length bucket prefill for the paged engine: K/V rows come back
+    unpadded (cache_len = L) for the engine to scatter into pool blocks."""
+    return hybrid_prefill_slotted(params, cfg, tokens=tokens, lens=lens,
+                                  cache_len=tokens.shape[1])
+
+
+def hybrid_decode_step_paged(params, cache, tokens, active,
+                             cfg: ModelConfig):
+    """One decode token per slot against the shared KV block pool.
+
+    Conv/SSM states update densely per row exactly as in the slotted
+    step; the shared attention block scatters/gathers through each slot's
+    block table (inactive rows never write the pool)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    lens, tables = cache["lens"], cache["tables"]
+
+    def mamba_step(x_, layer):
+        lp, conv_s, ssm_s = layer
+        h = apply_norm(cfg.norm, x_, lp["norm"], cfg.norm_eps)
+        y, conv_s, ssm_s = mamba2_decode(lp["mamba"], h, conv_s, ssm_s, cfg)
+        return x_ + y, (conv_s, ssm_s)
+
+    new_cache = {"lens": lens + active.astype(jnp.int32), "tables": tables}
+    if "groups" in params:
+        shared = params["shared"]
+
+        def group_step(x_, layer):
+            gp, conv_s, ssm_s, kc, vc = layer
+            x_, (conv_new, ssm_new) = jax.lax.scan(
+                mamba_step, x_, (gp, conv_s, ssm_s))
+            h = apply_norm(cfg.norm, x_, shared["attn_norm"], cfg.norm_eps)
+            a, kc, vc = attention_decode_paged(shared["attn"], h, kc, vc,
+                                               lens, tables, active, cfg)
             x_ = x_ + a
             x_ = x_ + mlp_block(shared["mlp"],
                                 apply_norm(cfg.norm, x_, shared["mlp_norm"],

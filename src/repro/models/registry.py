@@ -59,6 +59,24 @@ class ModelBundle:
                                       Tuple[jnp.ndarray, Any]]] = None
     make_slot_cache: Optional[Callable[[int, int], Any]] = None
     prefill_pads: bool = False
+    # paged-cache serving path (DESIGN.md §15): K/V live in a global pool
+    # of fixed-size blocks addressed through per-slot block tables, so the
+    # engine admits on free *blocks* instead of worst-case dense slots.
+    # * ``make_paged_cache(slots, cache_len, n_blocks, block_size)`` —
+    #   pools + ``tables: (slots, cache_len // block_size)`` + ``lens``
+    # * ``prefill_paged(params, {"tokens": (B, L), "lens": (B,)}) ->
+    #   (logits, row cache)`` — K/V rows unpadded (cache_len = L); the
+    #   engine scatters them into pool blocks
+    # * ``decode_paged(params, cache, {"tokens", "active"})`` — like
+    #   decode_slotted but through the block tables
+    # * ``paged_cache_specs()`` — leaves with a "blocks" axis are
+    #   pool-resident; "batch" leaves are per-slot
+    prefill_paged: Optional[Callable[[Any, Dict[str, Any]],
+                                     Tuple[jnp.ndarray, Any]]] = None
+    decode_paged: Optional[Callable[[Any, Any, Dict[str, Any]],
+                                    Tuple[jnp.ndarray, Any]]] = None
+    make_paged_cache: Optional[Callable[[int, int, int, int], Any]] = None
+    paged_cache_specs: Optional[Callable[[], Any]] = None
 
     # ------------------------------------------------------------ dry-run io
     def input_specs(self, cell: ShapeCell) -> Tuple[Dict[str, Any],
@@ -145,6 +163,14 @@ def _lm_bundle(cfg: ModelConfig) -> ModelBundle:
         return M_lm.lm_decode_step_slotted(params, cache, batch["tokens"],
                                            batch["active"], cfg)
 
+    def prefill_paged(params, batch):
+        return M_lm.lm_prefill_paged(params, cfg, tokens=batch["tokens"],
+                                     lens=batch["lens"])
+
+    def decode_paged(params, cache, batch):
+        return M_lm.lm_decode_step_paged(params, cache, batch["tokens"],
+                                         batch["active"], cfg)
+
     return ModelBundle(
         cfg=cfg,
         init=lambda rng: M_lm.init_lm(rng, cfg),
@@ -160,6 +186,11 @@ def _lm_bundle(cfg: ModelConfig) -> ModelBundle:
         decode_slotted=decode_slotted,
         make_slot_cache=lambda b, s: M_lm.init_slot_cache(cfg, b, s),
         prefill_pads=True,
+        prefill_paged=prefill_paged,
+        decode_paged=decode_paged,
+        make_paged_cache=lambda b, s, nb, bs: M_lm.init_paged_cache(
+            cfg, b, s, nb, bs),
+        paged_cache_specs=lambda: M_lm.paged_cache_specs(cfg),
     )
 
 
@@ -184,6 +215,14 @@ def _hybrid_bundle(cfg: ModelConfig) -> ModelBundle:
         return M_hybrid.hybrid_decode_step_slotted(
             params, cache, batch["tokens"], batch["active"], cfg)
 
+    def prefill_paged(params, batch):
+        return M_hybrid.hybrid_prefill_paged(
+            params, cfg, tokens=batch["tokens"], lens=batch["lens"])
+
+    def decode_paged(params, cache, batch):
+        return M_hybrid.hybrid_decode_step_paged(
+            params, cache, batch["tokens"], batch["active"], cfg)
+
     return ModelBundle(
         cfg=cfg,
         init=lambda rng: M_hybrid.init_hybrid(rng, cfg),
@@ -202,6 +241,11 @@ def _hybrid_bundle(cfg: ModelConfig) -> ModelBundle:
         make_slot_cache=lambda b, s: M_hybrid.init_hybrid_slot_cache(
             cfg, b, s),
         prefill_pads=False,
+        prefill_paged=prefill_paged,
+        decode_paged=decode_paged,
+        make_paged_cache=lambda b, s, nb, bs: M_hybrid.init_hybrid_paged_cache(
+            cfg, b, s, nb, bs),
+        paged_cache_specs=lambda: M_hybrid.hybrid_paged_cache_specs(cfg),
     )
 
 

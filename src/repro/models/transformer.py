@@ -24,6 +24,7 @@ from repro.distributed.sharding import logical_constraint
 from repro.models.attention import (
     attention_block,
     attention_decode,
+    attention_decode_paged,
     attention_decode_slotted,
     attention_prefill,
     attention_specs,
@@ -325,6 +326,91 @@ def lm_decode_step_slotted(
     x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
     logits = unembed(params, x, cfg)[:, 0]
     new_cache = {"k": k_all, "v": v_all,
+                 "lens": lens + active.astype(jnp.int32)}
+    return logits, new_cache
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, cache_len: int,
+                     n_blocks: int, block_size: int,
+                     dtype=None) -> Dict[str, Any]:
+    """Paged cache layout: a global pool of fixed-size KV blocks shared by
+    every slot, plus per-slot block tables.
+
+    ``k``/``v``: (layers, n_blocks, block_size, KVH, hd) pools;
+    ``tables``: (slots, cache_len // block_size) int32, sentinel
+    ``n_blocks`` marks unallocated entries; ``lens``: per-slot lengths.
+    Pools are zero-initialized so unwritten positions gather finite values
+    (masked to exact zeros by the softmax)."""
+    assert cache_len % block_size == 0, \
+        "cache_len must be a block_size multiple"
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.n_layers, n_blocks, block_size, kvh, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "lens": jnp.zeros((slots,), jnp.int32),
+        "tables": jnp.full((slots, cache_len // block_size), n_blocks,
+                           jnp.int32),
+    }
+
+
+def paged_cache_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Axis-name specs for the paged cache: leaves with a "blocks" axis are
+    pool-resident (spliced block/offset-wise); "batch" leaves are per-slot."""
+    kv = ("layers", "blocks", "block", "kv_heads", "head_dim")
+    return {"k": kv, "v": kv,
+            "lens": ("batch",), "tables": ("batch", None)}
+
+
+def lm_prefill_paged(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    *,
+    tokens: jnp.ndarray,          # (B, L) right-padded prompts
+    lens: jnp.ndarray,            # (B,) true prompt lengths (<= L)
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Bucket prefill for the paged engine: identical forward to the
+    slotted prefill, but the K/V rows come back *unpadded* (cache_len = L)
+    as a row cache the engine scatters into pool blocks — prefill never
+    reserves worst-case dense rows."""
+    return lm_prefill_slotted(params, cfg, tokens=tokens, lens=lens,
+                              cache_len=tokens.shape[1])
+
+
+def lm_decode_step_paged(
+    params: Dict[str, Any],
+    cache: Dict[str, Any],        # paged cache: k/v pools + lens + tables
+    tokens: jnp.ndarray,          # (B, 1) int32
+    active: jnp.ndarray,          # (B,) bool
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One decode step over every slot against the shared block pool.
+
+    Like :func:`lm_decode_step_slotted` but K/V scatter/gather goes
+    through each slot's block table; inactive rows never write the pool
+    (their blocks may have been reassigned)."""
+    x = embed_tokens(params, tokens, cfg)
+    lens, tables = cache["lens"], cache["tables"]
+
+    def scan_body(x_, layer):
+        lp, kc, vc = layer
+        h = apply_norm(cfg.norm, x_, lp["attn_norm"], cfg.norm_eps)
+        a, kc_new, vc_new = attention_decode_paged(
+            lp["attn"], h, kc, vc, lens, tables, active, cfg)
+        h = x_ + a
+        hn = apply_norm(cfg.norm, h, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_block(lp["moe"], hn, cfg)
+        else:
+            y = mlp_block(lp["mlp"], hn, cfg)
+        return h + y, (kc_new, vc_new)
+
+    x, (k_all, v_all) = jax.lax.scan(
+        scan_body, x, (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(cfg.norm, x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, cfg)[:, 0]
+    new_cache = {"k": k_all, "v": v_all, "tables": tables,
                  "lens": lens + active.astype(jnp.int32)}
     return logits, new_cache
 

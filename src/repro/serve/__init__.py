@@ -5,8 +5,11 @@
 * :class:`~repro.serve.router.ReplicaRouter` — N engine replicas behind
   one submit/run/drain API: health-checked dispatch, failover, load
   shedding, hedged requests.
-* :mod:`repro.serve.loadgen` — open-loop Poisson / heavy-tail / burst
-  workloads + latency stats.
+* :mod:`repro.serve.loadgen` — open-loop Poisson / heavy-tail / burst /
+  long-tail-prompt workloads + latency stats.
+* :mod:`repro.serve.paged` — :class:`~repro.serve.paged.BlockPool`
+  block-granular KV-cache allocator behind ``EngineConfig(paged=True)``
+  (DESIGN.md §15).
 * :func:`~repro.serve.winner.serve_winner` — genome front-end: NAS winner
   → train → compile → serve (search → implement → deploy);
   :func:`~repro.serve.winner.replicate_winner` adds replicated dispatch.
@@ -21,9 +24,11 @@ from repro.serve.engine import (
 from repro.serve.loadgen import (
     gamma_workload,
     latency_stats,
+    longtail_workload,
     onoff_workload,
     poisson_workload,
 )
+from repro.serve.paged import BlockPool, blocks_for
 from repro.serve.router import ReplicaRouter, RouterConfig
 from repro.serve.winner import (
     ReplicatedWinner,
@@ -34,6 +39,7 @@ from repro.serve.winner import (
 )
 
 __all__ = [
+    "BlockPool",
     "EngineConfig",
     "PrefillBucket",
     "ReplicaRouter",
@@ -42,11 +48,13 @@ __all__ = [
     "ServableWinner",
     "ServeEngine",
     "ServeRequest",
+    "blocks_for",
     "build_buckets",
     "compile_winner",
     "gamma_workload",
     "greedy_reference",
     "latency_stats",
+    "longtail_workload",
     "onoff_workload",
     "poisson_workload",
     "replicate_winner",

@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.core.faults import FaultPlan
 from repro.serve.buckets import build_buckets
+from repro.serve.paged import BlockPool
 
 
 @dataclasses.dataclass
@@ -74,6 +75,9 @@ class ServeRequest:
     done: bool = False
     expired: bool = False          # deadline ran out (out = partial tokens)
     rejected: bool = False         # bounced off a full admission queue
+    oom: bool = False              # shed by the paged engine when the block
+    #   pool ran dry mid-decode (out = partial tokens, prefix of reference)
+    blocks_held: int = 0           # peak cache blocks held (paged engine)
     # measured lifecycle (seconds from the run's t0)
     t_arrival: float = 0.0
     t_admit: float = 0.0
@@ -99,6 +103,13 @@ class EngineConfig:
     #   held to fill a denser bucket (0 = admit immediately; latency knob)
     max_queue: Optional[int] = None  # admission-queue bound: a submit over
     #   it is rejected explicitly (backpressure).  None = unbounded
+    # paged KV cache (DESIGN.md §15): admit on free *blocks* instead of
+    # worst-case dense slots.  ``n_blocks=None`` sizes the pool for the
+    # worst case (slots * cache_len / block_size — never OOMs); a smaller
+    # pool trades capacity for memory, with explicit OOM shedding.
+    paged: bool = False
+    block_size: int = 16           # tokens per cache block
+    n_blocks: Optional[int] = None  # pool size; None = worst case
 
 
 class ServeEngine:
@@ -122,6 +133,33 @@ class ServeEngine:
         self.cfg = cfg
         self._specs = {k: v for k, v in bundle.cache_specs().items()
                        if k != "len"}
+        self.paged = cfg.paged
+        self.pool: Optional[BlockPool] = None
+        if cfg.paged:
+            if (bundle.decode_paged is None or bundle.prefill_paged is None
+                    or bundle.make_paged_cache is None):
+                raise ValueError(
+                    f"family {bundle.cfg.family!r} has no paged serving "
+                    f"path (supported: decoder-only LM and SSM/hybrid "
+                    f"families)")
+            if cfg.cache_len % cfg.block_size:
+                raise ValueError(
+                    f"cache_len {cfg.cache_len} is not a multiple of "
+                    f"block_size {cfg.block_size}")
+            max_blocks = cfg.cache_len // cfg.block_size
+            n_blocks = cfg.n_blocks or cfg.slots * max_blocks
+            self.pool = BlockPool(n_blocks, cfg.block_size, cfg.slots,
+                                  max_blocks)
+            # pool-resident leaves are spliced block/offset-wise; per-slot
+            # leaves (hybrid conv/SSM state) splice at their batch axis
+            pspecs = bundle.paged_cache_specs()
+            self._pool_specs = {k: v for k, v in pspecs.items()
+                                if k not in ("lens", "tables")
+                                and "blocks" in v}
+            self._row_specs = {k: v for k, v in pspecs.items()
+                               if k not in ("lens", "tables")
+                               and "blocks" not in v}
+            self._tables_dirty = False
 
         def _prefill(params, tokens, lens):
             return bundle.prefill_slotted(
@@ -144,9 +182,38 @@ class ServeEngine:
                 cache1["lens"], mode="drop")
             return out
 
+        def _prefill_paged(params, tokens, lens):
+            return bundle.prefill_paged(
+                params, {"tokens": tokens, "lens": lens})
+
+        def _decode_paged(params, cache, tokens, active):
+            return bundle.decode_paged(
+                params, cache, {"tokens": tokens, "active": active})
+
+        def _splice_paged(cache, rows, slot_idx, blk, off):
+            # scatter prefill rows into the block pool: (B, L) block /
+            # offset index arrays computed host-side from the allocator;
+            # sentinel block indices (pad rows, pad tail) are dropped
+            out = dict(cache)
+            for key, spec in self._pool_specs.items():
+                ax = spec.index("blocks")
+                idx = (slice(None),) * ax + (blk, off)
+                out[key] = cache[key].at[idx].set(rows[key], mode="drop")
+            for key, spec in self._row_specs.items():
+                ax = spec.index("batch")
+                idx = (slice(None),) * ax + (slot_idx,)
+                out[key] = cache[key].at[idx].set(rows[key], mode="drop")
+            out["lens"] = cache["lens"].at[slot_idx].set(
+                rows["lens"], mode="drop")
+            return out
+
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
         self._splice = jax.jit(_splice)
+        if cfg.paged:
+            self._prefill_paged = jax.jit(_prefill_paged)
+            self._decode_paged = jax.jit(_decode_paged)
+            self._splice_paged = jax.jit(_splice_paged)
         self.reset()
 
     # ------------------------------------------------------------ lifecycle
@@ -154,7 +221,14 @@ class ServeEngine:
         """Fresh slot state (cache arrays are reallocated; the jitted
         executables persist, so a warmed engine stays warm)."""
         cfg = self.cfg
-        self.cache = self.bundle.make_slot_cache(cfg.slots, cfg.cache_len)
+        if self.paged:
+            self.pool.reset()
+            self.cache = self.bundle.make_paged_cache(
+                cfg.slots, cfg.cache_len, self.pool.n_blocks, cfg.block_size)
+            self._tables_dirty = False
+        else:
+            self.cache = self.bundle.make_slot_cache(cfg.slots,
+                                                     cfg.cache_len)
         self.active: List[Optional[ServeRequest]] = [None] * cfg.slots
         self.last_tok = np.zeros((cfg.slots,), np.int32)
         self.waiting: List[ServeRequest] = []   # arrived, not yet admitted
@@ -162,6 +236,8 @@ class ServeEngine:
         self.rejected: List[ServeRequest] = []  # bounced at admission
         self.decode_steps = 0
         self.prefill_calls = 0
+        self.shed_blocks = 0        # paged OOM sheds (explicit, counted)
+        self.peak_concurrency = 0   # max sequences simultaneously in flight
 
     def submit(self, req: ServeRequest) -> bool:
         """Queue a request.  Returns ``False`` (and flags the request
@@ -172,6 +248,14 @@ class ServeEngine:
             raise ValueError(f"request {req.rid}: prompt length "
                              f"{len(req.prompt)} exceeds cache_len "
                              f"{self.cfg.cache_len}")
+        if self.paged:
+            need = self.pool.blocks_for(len(req.prompt))
+            if need > self.pool.n_blocks:
+                # would never fit even an empty pool: reject explicitly
+                # (truncating the prompt would silently change the output)
+                raise ValueError(
+                    f"request {req.rid}: prompt needs {need} cache blocks "
+                    f"but the pool only has {self.pool.n_blocks}")
         if self.cfg.max_queue is not None \
                 and len(self.waiting) >= self.cfg.max_queue:
             req.rejected = True
@@ -189,6 +273,8 @@ class ServeEngine:
         ``rid`` is not held here (already finished, or never submitted)."""
         for s, r in enumerate(self.active):
             if r is not None and r.rid == rid:
+                if self.paged:
+                    self._release_blocks(s, r)
                 self.active[s] = None
                 return r
         for i, r in enumerate(self.waiting):
@@ -218,6 +304,87 @@ class ServeEngine:
     def has_work(self) -> bool:
         return bool(self.waiting) or any(r is not None for r in self.active)
 
+    @property
+    def free_blocks(self) -> Optional[int]:
+        """Free cache blocks in the pool (``None`` for a dense engine) —
+        the memory-depth signal the router's placement prefers."""
+        return self.pool.free_count if self.paged else None
+
+    def stats(self) -> Dict[str, Any]:
+        """Counters for loadgen reports: throughput-side (decode steps,
+        prefill dispatches), concurrency (peak sequences in flight) and —
+        for the paged engine — block-pool residency."""
+        d: Dict[str, Any] = {
+            "decode_steps": self.decode_steps,
+            "prefill_calls": self.prefill_calls,
+            "peak_concurrency": self.peak_concurrency,
+            "shed_blocks": self.shed_blocks,
+        }
+        if self.paged:
+            d.update({
+                "n_blocks": self.pool.n_blocks,
+                "block_size": self.cfg.block_size,
+                "free_blocks": self.pool.free_count,
+                "peak_blocks_used": self.pool.peak_used,
+            })
+        return d
+
+    # ------------------------------------------------------------ block pool
+    def _release_blocks(self, slot: int, req: ServeRequest) -> None:
+        """Return a leaving request's blocks to the pool (records its peak
+        residency first; held counts are monotone until release)."""
+        req.blocks_held = max(req.blocks_held, self.pool.held(slot))
+        if self.pool.free_slot(slot):
+            self._tables_dirty = True
+
+    def _refresh_tables(self) -> None:
+        """Push the allocator's block tables to the device cache whenever
+        allocation changed since the last dispatch."""
+        if self._tables_dirty:
+            self.cache["tables"] = jnp.asarray(self.pool.table_array())
+            self._tables_dirty = False
+
+    def _grow_blocks(self, now: float) -> int:
+        """Pre-decode growth: every active slot needs the block covering
+        its next write position.  On pool exhaustion, sheds the
+        youngest-admitted starved request (explicit OOM: ``oom`` flag,
+        partial output kept — a prefix of the reference — and the
+        ``shed_blocks`` counter bumped; zero silent drops), then retries
+        the remaining starved slots with the freed blocks.  Returns the
+        number shed."""
+        need = []
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            pos = len(req.prompt) + len(req.out) - 1  # next write position
+            need.append((req.t_admit, req.rid, s, pos))
+        need.sort()
+        before = self.pool.allocs
+        pending = need
+        shed = 0
+        while True:
+            failed = []
+            for item in pending:
+                _, _, s, pos = item
+                if not self.pool.ensure(s, pos):
+                    failed.append(item)
+            if not failed:
+                break
+            _, _, s, _ = failed[-1]   # youngest admission among the starved
+            req = self.active[s]
+            req.oom = True
+            req.done = True
+            req.t_done = now
+            self._release_blocks(s, req)
+            self.finished.append(req)
+            self.active[s] = None
+            self.shed_blocks += 1
+            shed += 1
+            pending = failed[:-1]
+        if self.pool.allocs != before:
+            self._tables_dirty = True
+        return shed
+
     # ------------------------------------------------------------ admission
     def _admit(self, now: float) -> int:
         """Fill free slots from the waiting queue (FCFS), one bucketed
@@ -226,19 +393,50 @@ class ServeEngine:
         free = [s for s, r in enumerate(self.active) if r is None]
         if not free or not self.waiting:
             return 0
-        take = min(len(free), len(self.waiting))
-        reqs = self.waiting[:take]
-        del self.waiting[:take]
-        slots = free[:take]
+        if self.paged:
+            # admit while *blocks* are available, not worst-case slots:
+            # strict FCFS — the first waiting request whose prompt doesn't
+            # fit blocks the line (no length-based overtaking, so paged
+            # admission order matches dense admission order exactly)
+            reqs: List[ServeRequest] = []
+            slots: List[int] = []
+            for req in self.waiting:
+                if len(reqs) >= len(free):
+                    break
+                need = self.pool.blocks_for(len(req.prompt))
+                if not self.pool.can_alloc(need):
+                    break
+                slot = free[len(reqs)]
+                self.pool.alloc(slot, need)
+                reqs.append(req)
+                slots.append(slot)
+            if not reqs:
+                return 0
+            del self.waiting[:len(reqs)]
+            self._tables_dirty = True
+        else:
+            take = min(len(free), len(self.waiting))
+            reqs = self.waiting[:take]
+            del self.waiting[:take]
+            slots = free[:take]
         buckets = build_buckets([r.prompt for r in reqs], slots,
                                 self.cfg.slots, pad_to=self.cfg.pad_to,
                                 max_batch=self.cfg.max_prefill_batch)
         for b in buckets:
-            logits, cache1 = self._prefill(self.params,
-                                           jnp.asarray(b.tokens),
-                                           jnp.asarray(b.lens))
-            self.cache = self._splice(self.cache, cache1,
-                                      jnp.asarray(b.slot_idx))
+            if self.paged:
+                self._refresh_tables()
+                logits, rows_cache = self._prefill_paged(
+                    self.params, jnp.asarray(b.tokens), jnp.asarray(b.lens))
+                blk, off = self._block_offsets(b)
+                self.cache = self._splice_paged(
+                    self.cache, rows_cache, jnp.asarray(b.slot_idx),
+                    jnp.asarray(blk), jnp.asarray(off))
+            else:
+                logits, cache1 = self._prefill(self.params,
+                                               jnp.asarray(b.tokens),
+                                               jnp.asarray(b.lens))
+                self.cache = self._splice(self.cache, cache1,
+                                          jnp.asarray(b.slot_idx))
             self.prefill_calls += 1
             first = np.asarray(jnp.argmax(logits, axis=-1))
             for row, i in enumerate(b.rows):
@@ -249,7 +447,24 @@ class ServeEngine:
                 self.active[slot] = req
                 self.last_tok[slot] = first[row]
                 self._maybe_finish(slot, now)
-        return take
+        return len(reqs)
+
+    def _block_offsets(self, b):
+        """(B, L) block / offset index arrays for a prefill bucket: row r,
+        position p lands in ``table[slot_r][p // bs]`` at offset
+        ``p % bs``; pad rows and pad-tail positions get the sentinel block
+        (scatter-dropped)."""
+        bp, L = b.tokens.shape
+        bs = self.cfg.block_size
+        pos = np.arange(L)
+        blk = np.full((bp, L), self.pool.n_blocks, np.int32)
+        off = np.tile((pos % bs).astype(np.int32), (bp, 1))
+        for row in range(len(b.rows)):
+            slot = int(b.slot_idx[row])
+            ln = int(b.lens[row])
+            table = np.asarray(self.pool.slot_blocks(slot), np.int32)
+            blk[row, :ln] = table[pos[:ln] // bs]
+        return blk, off
 
     def _maybe_finish(self, slot: int, now: float) -> None:
         req = self.active[slot]
@@ -257,6 +472,8 @@ class ServeEngine:
         if len(req.out) >= req.max_new or seq_len >= self.cfg.cache_len:
             req.done = True
             req.t_done = now
+            if self.paged:
+                self._release_blocks(slot, req)
             self.finished.append(req)
             self.active[slot] = None
 
@@ -272,6 +489,8 @@ class ServeEngine:
                 req.expired = True
                 req.done = True
                 req.t_done = now
+                if self.paged:
+                    self._release_blocks(s, req)  # deadline block reclaim
                 self.finished.append(req)
                 self.active[s] = None   # slot reclaimed
                 n += 1
@@ -296,7 +515,19 @@ class ServeEngine:
         active_mask = np.array([r is not None for r in self.active])
         if not active_mask.any():
             return 0
-        logits, self.cache = self._decode(
+        if self.paged:
+            # grow each active slot's table to cover this step's write
+            # position; pool exhaustion sheds explicitly (OOM), so the
+            # mask may shrink before the dispatch
+            self._grow_blocks(now)
+            active_mask = np.array([r is not None for r in self.active])
+            if not active_mask.any():
+                return 0
+            self._refresh_tables()
+            decode = self._decode_paged
+        else:
+            decode = self._decode
+        logits, self.cache = decode(
             self.params, self.cache,
             jnp.asarray(self.last_tok[:, None]), jnp.asarray(active_mask))
         self.decode_steps += 1
@@ -325,6 +556,8 @@ class ServeEngine:
         add to its virtual clock (``realtime=True`` sleeps it here)."""
         expired = self._expire(now)
         admitted = self._admit(now)
+        self.peak_concurrency = max(self.peak_concurrency,
+                                    sum(r is not None for r in self.active))
         stall_s = 0.0
         if self.faults is not None:
             # injected decode stall: the engine owns no clock of its own, so
@@ -416,6 +649,8 @@ class ServeEngine:
                     req.expired = True
                     req.done = True
                     req.t_done = now
+                    if self.paged:
+                        self._release_blocks(s, req)
                     self.finished.append(req)
                     self.active[s] = None
             self.step(now)

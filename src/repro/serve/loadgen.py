@@ -16,6 +16,10 @@ Three arrival shapes, all seeded-deterministic:
   the replica router's load shedding is benchmarked under;
 * :func:`onoff_workload` — on/off bursts: Poisson arrivals during on
   windows, silence during off windows — the diurnal/batch-upstream shape.
+* :func:`longtail_workload` — Poisson arrivals with *log-normal* prompt
+  lengths: most prompts short, a heavy tail near ``max_prompt`` — the
+  length mix where paged KV allocation beats worst-case dense slots
+  (DESIGN.md §15).
 """
 from __future__ import annotations
 
@@ -121,6 +125,46 @@ def onoff_workload(
     arrivals = (busy // on_s) * period + (busy % on_s)
     return _requests_at(arrivals, rng, vocab_size=vocab_size,
                         prompt_lens=prompt_lens, out_lens=out_lens)
+
+
+def longtail_workload(
+    n_requests: int,
+    *,
+    vocab_size: int,
+    rate_per_s: float,
+    median_prompt: int = 6,
+    sigma: float = 0.8,
+    max_prompt: int = 64,
+    out_lens: Sequence[int] = (4, 8, 12, 16),
+    seed: int = 0,
+) -> List[ServeRequest]:
+    """Long-tail prompt-length mix: Poisson arrivals (``rate_per_s=0`` =
+    burst) with prompt lengths drawn log-normally — median
+    ``median_prompt``, log-space spread ``sigma``, clipped to
+    ``[1, max_prompt]``.  Most prompts are a handful of tokens while a
+    few approach ``max_prompt``; dense slots must reserve ``max_prompt``
+    positions for everyone, a paged pool only pays for what each request
+    actually holds.  Draw order (arrivals, then per-request prompt
+    length / prompt / output choice) is part of the determinism
+    contract."""
+    if median_prompt < 1 or max_prompt < median_prompt:
+        raise ValueError("need 1 <= median_prompt <= max_prompt")
+    rng = np.random.default_rng(seed)
+    if rate_per_s > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / rate_per_s, n_requests))
+    else:
+        arrivals = np.zeros(n_requests)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(np.clip(round(rng.lognormal(np.log(median_prompt),
+                                               sigma)), 1, max_prompt))
+        reqs.append(ServeRequest(
+            rid=i,
+            prompt=rng.integers(0, vocab_size, plen).astype(np.int32),
+            max_new=int(rng.choice(out_lens)),
+            arrival_s=float(arrivals[i]),
+        ))
+    return reqs
 
 
 def latency_stats(finished: Sequence[ServeRequest],

@@ -62,6 +62,7 @@ import numpy as np
 
 from repro.core.faults import FaultPlan
 from repro.serve.engine import EngineConfig, ServeEngine, ServeRequest
+from repro.serve.paged import blocks_for
 
 
 @dataclasses.dataclass
@@ -109,6 +110,14 @@ class _Replica:
     @property
     def free_slots(self) -> int:
         return self.engine.cfg.slots - self.load
+
+    @property
+    def free_blocks(self) -> Optional[int]:
+        """Free KV-cache blocks (``None`` for dense engines).  The
+        router prefers block-rich replicas and skips replicas whose pool
+        cannot take a request's prompt — shedding/hedging on *block*
+        depth, not just slot counts."""
+        return self.engine.free_blocks
 
 
 class _Flight:
@@ -169,8 +178,10 @@ class ReplicaRouter:
             "shed_queue": 0, "shed_deadline": 0,
             "dispatches": 0, "failovers": 0, "restarts": 0,
             "hedges": 0, "hedge_wins": 0, "ticks": 0,
+            "shed_blocks": 0,
             "quarantined": [],
         }
+        self._min_free_blocks: Optional[int] = None
 
     # ------------------------------------------------------------ admission
     def _est_wait_s(self) -> Optional[float]:
@@ -202,6 +213,13 @@ class ReplicaRouter:
             raise ValueError(f"request {req.rid}: prompt length "
                              f"{len(req.prompt)} exceeds cache_len "
                              f"{self.cfg.engine.cache_len}")
+        if self.cfg.engine.paged:
+            pool = self.replicas[0].engine.pool
+            need = pool.blocks_for(len(req.prompt))
+            if need > pool.n_blocks:
+                raise ValueError(f"request {req.rid}: prompt needs {need} "
+                                 f"blocks but the pool only has "
+                                 f"{pool.n_blocks}")
         if self.cfg.max_queue is not None \
                 and len(self.queue) >= self.cfg.max_queue:
             return self._shed(req, now, "queue")
@@ -284,25 +302,47 @@ class ReplicaRouter:
         fl.clones[rep.idx] = clone
         self.stats["dispatches"] += 1
 
-    def _pick(self, exclude: Tuple[int, ...] = ()) -> Optional[_Replica]:
-        """Least-loaded live replica with a free slot (ties: lowest index).
+    def _need_blocks(self, req: ServeRequest) -> Optional[int]:
+        """Blocks this request's prompt needs on a paged replica (``None``
+        when the engines are dense)."""
+        if not self.cfg.engine.paged:
+            return None
+        return blocks_for(len(req.prompt), self.cfg.engine.block_size)
+
+    def _pick(self, exclude: Tuple[int, ...] = (),
+              need_blocks: Optional[int] = None) -> Optional[_Replica]:
+        """Least-loaded live replica with a free slot (ties: deepest free
+        block pool, then lowest index).  When ``need_blocks`` is given,
+        paged replicas whose pool cannot take the prompt right now are
+        skipped — the request waits rather than being admitted to OOM.
         Health here is the *router's* view — a silently stalled replica
         still looks healthy until the heartbeat catches it."""
         cands = [r for r in self.replicas
                  if r.live and r.idx not in exclude and r.free_slots > 0]
-        return min(cands, key=lambda r: (r.load, r.idx)) if cands else None
+        if need_blocks is not None:
+            cands = [r for r in cands
+                     if r.free_blocks is None or r.free_blocks >= need_blocks]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (
+            r.load,
+            -(r.free_blocks if r.free_blocks is not None else 0),
+            r.idx))
 
     def _dispatch(self, now: float, *, draining: bool = False) -> int:
         """Hand queued requests to replicas with free capacity — failover
         evictions first (oldest admissions), then the admission queue
-        (skipped while draining)."""
+        (skipped while draining).  The head request is peeked before
+        placement so the pick can be block-aware; an unplaceable head
+        blocks its line (FCFS, matching the engine's head-of-line
+        admission)."""
         n = 0
         while True:
             src = self._requeue if self._requeue else \
                 (self.queue if self.queue and not draining else None)
             if src is None:
                 return n
-            rep = self._pick()
+            rep = self._pick(need_blocks=self._need_blocks(src[0]))
             if rep is None:
                 return n
             req = src.popleft()
@@ -333,7 +373,8 @@ class ReplicaRouter:
         for fl in list(self.flights.values()):
             if fl.hedged or now - fl.t_dispatch <= thresh:
                 continue
-            rep = self._pick(exclude=tuple(fl.clones))
+            rep = self._pick(exclude=tuple(fl.clones),
+                             need_blocks=self._need_blocks(fl.req))
             if rep is None:
                 continue
             self._place(fl.req, rep, now)
@@ -347,6 +388,12 @@ class ReplicaRouter:
             if not rep.live or now < rep.stalled_until:
                 continue               # an injected stall makes no progress
             produced += int(rep.engine.tick(now)["produced"])
+        if self.cfg.engine.paged:
+            depth = min((r.free_blocks for r in self.replicas if r.live),
+                        default=None)
+            if depth is not None and (self._min_free_blocks is None
+                                      or depth < self._min_free_blocks):
+                self._min_free_blocks = depth
         return produced
 
     def _heartbeat(self, now: float) -> None:
@@ -385,6 +432,10 @@ class ReplicaRouter:
                 req.t_admit = clone.t_admit
                 req.t_first = clone.t_first
                 req.t_done = clone.t_done
+                req.oom = clone.oom
+                req.blocks_held = clone.blocks_held
+                if clone.oom:
+                    self.stats["shed_blocks"] += 1
                 for ridx in fl.clones:
                     if ridx != rep.idx:
                         self.replicas[ridx].engine.cancel(clone.rid)
@@ -470,6 +521,14 @@ class ReplicaRouter:
                     f"pending={len(pending)} done={len(self.done)} "
                     f"shed={len(self.shed)}")
         self.stats["ticks"] = self.tick_no
+        if self.cfg.engine.paged:
+            # shed_blocks is counted at _collect (an engine reset on
+            # failover wipes the engine-side counter, the router's is
+            # durable); pool peaks survive resets within one run only on
+            # live replicas, so take the max over all of them here.
+            self.stats["min_free_blocks"] = self._min_free_blocks
+            self.stats["peak_blocks_used"] = max(
+                r.engine.pool.peak_used for r in self.replicas)
         return sorted(self.done + self.shed, key=lambda r: r.rid)
 
     # ---------------------------------------------------------------- drain

@@ -50,6 +50,9 @@ class ServableWinner:
     train_meta: Dict[str, float]
     _predict: Any = None           # jitted (B, L, 2) -> (B, n_classes)
     batches_served: int = 0
+    paged: bool = False            # KV-cache preference recorded for the
+    #   token-serving deployment path (launch/serve.py --engine --paged);
+    #   the classifier forward itself has no KV cache
 
     def predict(self, x: np.ndarray) -> np.ndarray:
         """Deployment-mode logits for a batch of windows ``(B, L, 2)``.
@@ -276,6 +279,7 @@ def serve_winner(
     seed: int = 0,
     replicas: int = 1,
     devices: Optional[Sequence[Any]] = None,
+    paged: bool = False,
     log=print,
 ) -> Union[ServableWinner, "ReplicatedWinner"]:
     """search → implement → deploy: pick the goal's best feasible
@@ -284,6 +288,12 @@ def serve_winner(
     ``replicas > 1`` routes the winner through replicated dispatch
     (:func:`replicate_winner`): device-affine copies, round-robin +
     failover, fail-streak quarantine — the resilient deployment default.
+
+    ``paged=True`` records the paged KV-cache preference on the handle
+    for the token-serving deployment front-end (launch/serve.py builds
+    ``EngineConfig(paged=True)`` from it — DESIGN.md §15); the winner's
+    own classification forward is prefill-only and has no cache, so this
+    changes nothing about ``predict``.
 
     Raises ``LookupError`` when no candidate meets the goal's constraints
     (serve nothing rather than an infeasible model)."""
@@ -302,6 +312,10 @@ def serve_winner(
     log(f"[serve] trained+compiled in {time.time()-t0:.1f}s "
         f"(det={winner.train_meta['detection_rate']:.3f} "
         f"fa={winner.train_meta['false_alarm_rate']:.3f})")
+    if paged:
+        winner.paged = True
+        log("[serve] paged KV cache requested — recorded for the token-"
+            "serving engine (the classifier forward itself is cache-free)")
     if replicas > 1:
         log(f"[serve] replicating winner onto {replicas} replicas")
         return replicate_winner(winner, replicas, devices=devices,

@@ -1,0 +1,117 @@
+"""Paged decode attention vs the dense-gather oracle (DESIGN.md §15).
+
+Standalone from test_kernels.py (which importorskips hypothesis) so the
+paged parity sweep always runs in tier-1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+# ------------------------------------------------- paged decode attention ---
+from repro.kernels.decode_attention.ops import (  # noqa: E402
+    paged_decode_attention,
+    paged_decode_attention_chunked,
+    resolve_interpret,
+)
+from repro.kernels.decode_attention.ref import (  # noqa: E402
+    gather_paged_kv,
+    paged_decode_attention_ref,
+)
+
+
+def _paged_case(seed, B, NB, BS, KVH, H, hd, n_pages=None):
+    """Random paged layout with shuffled block tables, sentinel tails and
+    mixed per-row kv_len (some rows not spanning all their blocks)."""
+    rng = np.random.default_rng(seed)
+    P = n_pages or B * NB + 3          # spare pages the tables never touch
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, BS, KVH, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, BS, KVH, hd)), jnp.float32)
+    perm = rng.permutation(P)[:B * NB].reshape(B, NB)
+    kv_len = rng.integers(1, NB * BS + 1, B).astype(np.int32)
+    tables = np.full((B, NB), P, np.int32)     # sentinel = P
+    for b in range(B):
+        nb = -(-int(kv_len[b]) // BS)
+        tables[b, :nb] = perm[b, :nb]
+    return q, kp, vp, jnp.asarray(tables), jnp.asarray(kv_len)
+
+
+@pytest.mark.parametrize("B,NB,BS,KVH,H,hd", [
+    (3, 4, 16, 2, 4, 32),
+    (1, 8, 8, 1, 8, 64),      # MQA, many small blocks
+    (4, 2, 32, 4, 4, 16),     # MHA-ish, two big blocks
+])
+def test_paged_decode_pallas_matches_ref(B, NB, BS, KVH, H, hd):
+    q, kp, vp, tables, kv_len = _paged_case(B * 10 + NB, B, NB, BS,
+                                            KVH, H, hd)
+    got = paged_decode_attention(q, kp, vp, tables, kv_len,
+                                 impl="pallas", interpret=True)
+    want = paged_decode_attention_ref(q, kp, vp, tables, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("ppc", [1, 2, 8])
+def test_paged_decode_chunked_matches_ref(ppc):
+    q, kp, vp, tables, kv_len = _paged_case(11, 3, 4, 16, 2, 4, 32)
+    got = paged_decode_attention_chunked(q, kp, vp, tables, kv_len,
+                                         pages_per_chunk=ppc)
+    want = paged_decode_attention_ref(q, kp, vp, tables, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_gather_matches_dense_layout():
+    """gather_paged_kv of an identity-table pool is exactly the dense
+    cache it was split from — the bit-parity bridge the serving engine
+    relies on (DESIGN.md §15)."""
+    rng = np.random.default_rng(5)
+    B, S, KVH, hd, BS = 2, 64, 2, 32, 16
+    dense = jnp.asarray(rng.normal(size=(B, S, KVH, hd)), jnp.float32)
+    NB = S // BS
+    pages = dense.reshape(B * NB, BS, KVH, hd)
+    tables = jnp.arange(B * NB, dtype=jnp.int32).reshape(B, NB)
+    got = gather_paged_kv(pages, pages, tables)[0]
+    assert np.array_equal(np.asarray(got), np.asarray(dense))
+
+
+def test_paged_decode_ref_ignores_sentinel_and_spare_pages():
+    """Pages beyond kv_len (sentinel table tail + unreferenced spare
+    pages) must not leak into the output: corrupting them changes
+    nothing."""
+    q, kp, vp, tables, kv_len = _paged_case(13, 2, 4, 8, 2, 4, 16)
+    want = paged_decode_attention_ref(q, kp, vp, tables, kv_len)
+    t = np.asarray(tables)
+    used = set()
+    for b in range(t.shape[0]):
+        nb = -(-int(kv_len[b]) // 8)
+        used.update(t[b, :nb].tolist())
+    unused = [p for p in range(kp.shape[0]) if p not in used]
+    assert unused, "case must leave some pages unreferenced"
+    kp2 = kp.at[jnp.asarray(unused)].set(1e9)
+    vp2 = vp.at[jnp.asarray(unused)].set(1e9)
+    got = paged_decode_attention_ref(q, kp2, vp2, tables, kv_len)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_resolve_interpret_auto_default():
+    """interpret=None auto-selects from the backend: compiled on TPU,
+    interpreted elsewhere — so the TPU path runs the real kernel by
+    default and CPU tests never try to compile Mosaic."""
+    auto = resolve_interpret(None)
+    assert auto == (jax.default_backend() != "tpu")
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # the default path must actually run on this backend
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(1, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.float32)
+    lens = jnp.asarray([17], jnp.int32)
+    got = decode_attention(q, k, v, lens)          # interpret unspecified
+    want = decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

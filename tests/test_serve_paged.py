@@ -1,0 +1,278 @@
+"""Paged KV-cache serving (repro.serve.paged + EngineConfig(paged=True))
+— DESIGN.md §15.
+
+Same load-bearing invariant as test_serve.py — bit-identical greedy
+parity — plus the paged-specific contracts: block-granular admission
+beats worst-case dense slots at equal memory, pool exhaustion sheds
+*explicitly* (``oom`` flag, reference-prefix output, ``shed_blocks``
+counter, zero silent drops), and prefill splices under a full pool never
+corrupt resident slots (the ``mode="drop"`` sentinel scatter).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models.registry import build_model
+from repro.serve import (
+    BlockPool,
+    EngineConfig,
+    ReplicaRouter,
+    RouterConfig,
+    ServeEngine,
+    ServeRequest,
+    blocks_for,
+    greedy_reference,
+    longtail_workload,
+)
+
+CACHE_LEN = 48
+BS = 8                      # block size used throughout
+MAXB = CACHE_LEN // BS      # blocks per slot at full span
+
+
+def _bundle(arch):
+    cfg = reduced_config(arch)
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+def _requests(cfg, lens_out, seed=0):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(rid=i,
+                         prompt=rng.integers(0, cfg.vocab_size, pl).astype(
+                             np.int32),
+                         max_new=mn)
+            for i, (pl, mn) in enumerate(lens_out)]
+
+
+def _refs(bundle, params, reqs):
+    dec = jax.jit(bundle.decode_step)
+    return {r.rid: greedy_reference(bundle, params, r.prompt, r.max_new,
+                                    CACHE_LEN, decode_jit=dec)
+            for r in reqs}
+
+
+def _paged_cfg(slots=6, n_blocks=None, pad_to=8, **kw):
+    return EngineConfig(slots=slots, cache_len=CACHE_LEN, pad_to=pad_to,
+                        paged=True, block_size=BS, n_blocks=n_blocks, **kw)
+
+
+# --------------------------------------------------------------- BlockPool
+def test_block_pool_alloc_free_roundtrip():
+    pool = BlockPool(n_blocks=8, block_size=4, slots=3,
+                     max_blocks_per_slot=4)
+    assert pool.free_count == 8 and pool.used == 0
+    assert pool.alloc(0, 3) and pool.held(0) == 3
+    assert pool.alloc(1, 2) and pool.used == 5
+    assert pool.peak_used == 5
+    # all-or-nothing: 4 > 3 free fails and changes nothing
+    assert not pool.alloc(2, 4)
+    assert pool.free_count == 3 and pool.held(2) == 0
+    assert pool.free_slot(0) == 3
+    assert pool.free_count == 6
+    assert pool.peak_used == 5          # peak survives frees
+    # LIFO: freed blocks are reused first, deterministically
+    first = pool.slot_blocks(1)
+    assert pool.alloc(2, 1)
+    assert pool.slot_blocks(1) == first
+
+
+def test_block_pool_per_slot_cap():
+    pool = BlockPool(n_blocks=16, block_size=4, slots=2,
+                     max_blocks_per_slot=3)
+    assert pool.alloc(0, 3)
+    assert not pool.alloc(0, 1)         # at the per-slot span cap
+    assert pool.ensure(0, 11)           # pos 11 needs 3 blocks: no-op
+    assert not pool.ensure(0, 12)       # pos 12 needs a 4th block
+
+
+def test_block_pool_table_sentinel():
+    pool = BlockPool(n_blocks=6, block_size=4, slots=2,
+                     max_blocks_per_slot=3)
+    pool.alloc(0, 2)
+    t = pool.table_array()
+    assert t.shape == (2, 3) and t.dtype == np.int32
+    assert t[0, 0] != 6 and t[0, 1] != 6
+    assert t[0, 2] == 6 and (t[1] == 6).all()   # sentinel = n_blocks
+
+
+def test_blocks_for_rounding():
+    assert blocks_for(1, 8) == 1
+    assert blocks_for(8, 8) == 1
+    assert blocks_for(9, 8) == 2
+    assert blocks_for(0, 8) == 1        # even an empty prompt holds a block
+
+
+# ------------------------------------------------------------ engine parity
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "zamba2-7b"])
+def test_paged_engine_bit_parity(arch):
+    """Every request served through the paged engine matches the scalar
+    greedy reference bit for bit (LM and hybrid families)."""
+    cfg, bundle, params = _bundle(arch)
+    # hybrid scalar decode needs prompts >= conv_kernel - 1
+    reqs = _requests(cfg, [(5, 6), (12, 4), (31, 5), (8, 8), (4, 6),
+                           (19, 4)], seed=1)
+    refs = _refs(bundle, params, reqs)
+    eng = ServeEngine(bundle, params, _paged_cfg(
+        slots=4, n_blocks=18, pad_to=8 if bundle.prefill_pads else 1))
+    done = eng.run(reqs)
+    assert len(done) == len(reqs)
+    assert not any(r.oom for r in done)
+    for r in done:
+        assert r.out == refs[r.rid], f"rid {r.rid} diverged"
+    st = eng.stats()
+    assert st["peak_blocks_used"] <= 18
+    assert st["shed_blocks"] == 0
+    assert all(r.blocks_held >= blocks_for(len(r.prompt), BS)
+               for r in done)
+
+
+def test_paged_admission_beats_dense_at_equal_memory():
+    """Equal KV memory (same pooled token count): the paged engine admits
+    strictly more concurrent sequences than worst-case dense slots on a
+    short-prompt mix — the tentpole capacity win."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _requests(cfg, [(4, 4)] * 12, seed=2)
+    refs = _refs(bundle, params, reqs)
+
+    dense = ServeEngine(bundle, params, EngineConfig(
+        slots=2, cache_len=CACHE_LEN, pad_to=8))
+    dense_done = dense.run([ServeRequest(rid=r.rid, prompt=r.prompt,
+                                         max_new=r.max_new) for r in reqs])
+    # paged pool = same 2 * CACHE_LEN tokens, spread over 12 slots
+    paged = ServeEngine(bundle, params, _paged_cfg(
+        slots=12, n_blocks=2 * CACHE_LEN // BS))
+    paged_done = paged.run(reqs)
+
+    assert all(r.out == refs[r.rid] for r in dense_done)
+    assert all(r.out == refs[r.rid] for r in paged_done)
+    assert not any(r.oom for r in paged_done)
+    assert dense.stats()["peak_concurrency"] == 2
+    assert paged.stats()["peak_concurrency"] >= \
+        2 * dense.stats()["peak_concurrency"]
+
+
+def test_paged_oom_shed_explicit_prefix_parity():
+    """A pool too small for the admitted set's decode growth sheds the
+    youngest admission explicitly: ``oom`` flagged, output a bit-exact
+    *prefix* of the reference, ``shed_blocks`` counted, every request
+    returned (zero silent drops)."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = _requests(cfg, [(7, 12)] * 6, seed=3)
+    refs = _refs(bundle, params, reqs)
+    # 6 requests x 1-block prompts all admit into 7 blocks, then growth
+    # past 8 tokens wants a 2nd block each -> guaranteed exhaustion
+    eng = ServeEngine(bundle, params, _paged_cfg(slots=6, n_blocks=7))
+    done = eng.run(reqs)
+    assert len(done) == len(reqs)
+    shed = [r for r in done if r.oom]
+    assert shed, "tiny pool must shed at least one request"
+    assert eng.stats()["shed_blocks"] == len(shed)
+    for r in done:
+        if r.oom:
+            assert r.done and r.out == refs[r.rid][:len(r.out)]
+        else:
+            assert r.out == refs[r.rid]
+
+
+# --------------------------------------------------- admission edge cases
+def test_submit_rejects_prompt_over_cache_len():
+    """Over-long prompts raise — truncation would silently change the
+    output (satellite: explicit rejection, not truncation)."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    eng = ServeEngine(bundle, params, _paged_cfg())
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="cache_len"):
+        eng.submit(ServeRequest(
+            rid=0, prompt=rng.integers(0, cfg.vocab_size,
+                                       CACHE_LEN + 1).astype(np.int32),
+            max_new=2))
+
+
+def test_submit_rejects_prompt_over_pool_capacity():
+    """A prompt whose block demand exceeds the whole pool can never be
+    admitted — rejected explicitly at submit, engine and router alike."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    rng = np.random.default_rng(0)
+    big = ServeRequest(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, 3 * BS + 1).astype(np.int32), max_new=2)
+    eng = ServeEngine(bundle, params, _paged_cfg(n_blocks=3))
+    with pytest.raises(ValueError, match="blocks"):
+        eng.submit(big)
+    router = ReplicaRouter(bundle, params, RouterConfig(
+        replicas=1, engine=_paged_cfg(n_blocks=3)))
+    with pytest.raises(ValueError, match="blocks"):
+        router.submit(ServeRequest(rid=1, prompt=big.prompt, max_new=2))
+
+
+def test_splice_under_full_pool_preserves_resident_blocks():
+    """Admitting into a pool that fills completely must leave the blocks
+    already resident bit-identical — the ``mode="drop"`` sentinel scatter
+    never strays outside the new request's own blocks (satellite)."""
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    rng = np.random.default_rng(4)
+    # A spans 3 blocks; B will take the remaining 3 of a 6-block pool
+    a = ServeRequest(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, 2 * BS + 3).astype(np.int32), max_new=4)
+    b = ServeRequest(rid=1, prompt=rng.integers(
+        0, cfg.vocab_size, 2 * BS + 5).astype(np.int32), max_new=4)
+    eng = ServeEngine(bundle, params, _paged_cfg(slots=4, n_blocks=6))
+    eng.submit(a)
+    eng.tick(0.0)                       # admit + prefill + 1 decode step
+    a_blocks = jnp.asarray(eng.pool.slot_blocks(0))
+    # A's first two blocks are fully written and will not be touched by
+    # A's own later decode writes (those land in its 3rd block)
+    frozen = np.asarray(eng.cache["k"][:, a_blocks[:2]])
+    eng.submit(b)
+    eng.tick(1.0)                       # B's splice fills the pool
+    assert eng.pool.free_count == 0
+    after = np.asarray(eng.cache["k"][:, a_blocks[:2]])
+    assert np.array_equal(frozen, after)
+    done = eng.drain()
+    refs = _refs(bundle, params, [a, b])
+    for r in done:
+        assert r.out == refs[r.rid]
+
+
+# ------------------------------------------------------------------ router
+def test_router_paged_parity_and_block_stats():
+    cfg, bundle, params = _bundle("qwen2-0.5b")
+    reqs = longtail_workload(10, vocab_size=cfg.vocab_size, rate_per_s=0.0,
+                             median_prompt=6, sigma=0.8,
+                             max_prompt=CACHE_LEN - BS,
+                             out_lens=(4, 6, 8), seed=5)
+    refs = _refs(bundle, params, reqs)
+    router = ReplicaRouter(bundle, params, RouterConfig(
+        replicas=2, engine=_paged_cfg(slots=5, n_blocks=20)))
+    done = router.run([ServeRequest(rid=r.rid, prompt=r.prompt,
+                                    max_new=r.max_new,
+                                    arrival_s=r.arrival_s) for r in reqs])
+    assert len(done) == len(reqs)
+    for r in done:
+        if not r.oom:
+            assert r.out == refs[r.rid]
+        assert r.blocks_held >= 1       # residency copied off the clone
+    assert router.stats["shed_blocks"] == sum(r.oom for r in done)
+    assert router.stats["peak_blocks_used"] <= 20
+    assert router.stats["min_free_blocks"] is not None
+    assert router.stats["min_free_blocks"] >= 0
+
+
+# ----------------------------------------------------------------- loadgen
+def test_longtail_workload_deterministic_and_bounded():
+    cfg = reduced_config("qwen2-0.5b")
+    a = longtail_workload(20, vocab_size=cfg.vocab_size, rate_per_s=5.0,
+                          median_prompt=6, sigma=0.8, max_prompt=40,
+                          seed=9)
+    b = longtail_workload(20, vocab_size=cfg.vocab_size, rate_per_s=5.0,
+                          median_prompt=6, sigma=0.8, max_prompt=40,
+                          seed=9)
+    assert all(np.array_equal(x.prompt, y.prompt) and
+               x.arrival_s == y.arrival_s and x.max_new == y.max_new
+               for x, y in zip(a, b))
+    lens = [len(r.prompt) for r in a]
+    assert min(lens) >= 1 and max(lens) <= 40
+    assert len(set(lens)) > 3           # actually a mix, not one length
